@@ -1,0 +1,48 @@
+"""Benchmark: DWT gradient compression — collective-byte reduction vs
+reconstruction quality (the framework integration of the paper's
+transform; EXPERIMENTS.md §Perf hillclimb #1 evidence).
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as CMP
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("# DWT gradient compression: bytes ratio / error / throughput")
+    print("tensor,levels,bytes_ratio,rel_err_1shot,rel_err_ef20,us_per_call")
+    for shape in ((1024, 1024), (4096, 512), (16384,)):
+        g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        for levels in (1, 2, 3):
+            comp = jax.jit(lambda x, l=levels: CMP.compress(x, 0, l))
+            dec = jax.jit(lambda c, l=levels: CMP.decompress(c, 0, shape, l))
+            c = jax.block_until_ready(comp(g))
+            ratio = c.size / g.size
+            ghat = dec(c)
+            err1 = float(jnp.linalg.norm(ghat - g) / jnp.linalg.norm(g))
+            # error feedback over 2 full phase cycles
+            from repro.core.compression import n_phases
+            e = jnp.zeros_like(g)
+            tot = jnp.zeros_like(g)
+            ncyc = 2 * n_phases(levels)
+            for step in range(ncyc):
+                acc = e + g
+                ghat = CMP.decompress(CMP.compress(acc, step % n_phases(levels), levels), step % n_phases(levels), shape, levels)
+                e = acc - ghat
+                tot = tot + ghat
+            err20 = float(jnp.linalg.norm(tot / ncyc - g)
+                          / jnp.linalg.norm(g))
+            t0 = time.perf_counter()
+            for _ in range(5):
+                jax.block_until_ready(dec(comp(g)))
+            us = (time.perf_counter() - t0) / 5 * 1e6
+            print(f"{shape},{levels},{ratio:.4f},{err1:.3f},{err20:.3f},"
+                  f"{us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark: per-kernel statistics — steps, pallas_calls, MACs/quad, halo,
+ideal HBM bytes and the projected v5e step time per scheme (the kernel-
+level roofline; the numbers behind the §Perf DWT iteration log)."""
+from repro.core import optimize as O
+from repro.core import schemes as S
+from repro.kernels import ops as K
+
+HBM_BW = 819e9
+PEAK = 197e12
+SHAPE = (4096, 4096)
+
+
+def main():
+    print("# DWT kernel roofline on v5e (4096x4096 f32 image)")
+    print("wavelet,scheme,variant,steps,pallas_calls,ops_per_quad,halo,"
+          "hbm_MB,t_mem_us,t_compute_us,bound")
+    for wname in ("cdf53", "cdf97", "dd137"):
+        for sc in S.SCHEMES:
+            for label, optimize, fuse in (
+                    ("paper", False, "none"),
+                    ("paper+opt5", True, "none"),
+                    ("fused(beyond)", True, "scheme")):
+                st = K.scheme_stats(wname, sc, optimize, SHAPE, 4, fuse)
+                sch = (O.build_optimized(wname, sc) if optimize
+                       else S.build_scheme(wname, sc))
+                quads = SHAPE[0] * SHAPE[1] / 4
+                t_mem = st["hbm_bytes"] / HBM_BW * 1e6
+                # MACs: 2 flops each; VPU (not MXU) executes these:
+                # ~1/4 of chip peak is a fair VPU bound for f32 FMA
+                t_cmp = (sch.num_ops * quads * 2) / (PEAK / 4) * 1e6
+                bound = "memory" if t_mem > t_cmp else "compute"
+                print(f"{wname},{sc},{label},{st['steps']},"
+                      f"{st['pallas_calls']},{sch.num_ops},{sch.max_halo},"
+                      f"{st['hbm_bytes']/1e6:.1f},{t_mem:.0f},{t_cmp:.0f},"
+                      f"{bound}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+  1. table1   — paper Table 1 (steps + operation counts), exact-match vs
+                the paper's OpenCL column.
+  2. fig789   — paper Figures 7/8/9 (throughput vs image size per scheme):
+                CPU-measured + v5e HBM-model projections.
+  3. kernels  — per-kernel roofline (steps -> HBM round trips on TPU).
+  4. compress — DWT gradient compression (framework integration).
+  5. roofline — per-(arch x shape x mesh) summary from the dry-run
+                artifacts (if present).
+"""
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+
+    from benchmarks import table1_ops
+    print("=" * 72)
+    matched, total = table1_ops.main()
+    assert matched >= 13, f"Table 1 regression: {matched}/{total}"
+
+    print("=" * 72)
+    from benchmarks import throughput
+    throughput.main(sizes=(512, 1024) if quick else (512, 1024, 2048))
+
+    print("=" * 72)
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+
+    print("=" * 72)
+    from benchmarks import compression_bench
+    compression_bench.main()
+
+    print("=" * 72)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception as e:  # artifacts may not exist yet
+        print(f"# roofline artifacts not available: {e}")
+
+    print("=" * 72)
+    print(f"# benchmarks completed in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

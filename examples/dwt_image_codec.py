@@ -1,0 +1,54 @@
+"""Wavelet image codec — the paper's home application domain.
+
+    PYTHONPATH=src python examples/dwt_image_codec.py
+
+Multi-level CDF 9/7 transform (the JPEG 2000 lossy wavelet) computed with
+the paper's fastest scheme (non-separable polyconvolution), hard
+thresholding of detail coefficients, inverse transform; rate/PSNR sweep.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dwt2, idwt2, flatten_pyramid, unflatten_pyramid
+
+
+def synthetic_photo(n=512, seed=0):
+    """Smooth background + edges + texture: a stand-in for a photograph."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:n, 0:n] / n
+    img = 0.6 * np.sin(3 * np.pi * yy) * np.cos(2 * np.pi * xx)
+    img += (xx > 0.5) * 0.5 + (yy > 0.7) * 0.25          # edges
+    img += 0.05 * rng.standard_normal((n, n))            # texture
+    return jnp.asarray(img, jnp.float32)
+
+
+def psnr(a, b):
+    mse = float(jnp.mean((a - b) ** 2))
+    peak = float(jnp.max(jnp.abs(a)))
+    return 10 * np.log10(peak ** 2 / mse) if mse > 0 else np.inf
+
+
+def main():
+    img = synthetic_photo()
+    levels = 4
+    print(f"image {img.shape}, CDF 9/7, {levels} levels, ns-polyconv "
+          f"scheme (1 step per lifting pair)")
+    pyr = dwt2(img, wavelet="cdf97", levels=levels, scheme="ns-polyconv")
+    flat = flatten_pyramid(pyr)
+
+    print(f"{'keep%':>7s} {'PSNR dB':>9s}")
+    mags = np.sort(np.abs(np.asarray(flat)).ravel())
+    for keep in (0.5, 0.2, 0.1, 0.05, 0.02):
+        thresh = mags[int((1 - keep) * len(mags))]
+        kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+        rec = idwt2(unflatten_pyramid(kept, levels), wavelet="cdf97",
+                    scheme="ns-polyconv")
+        print(f"{keep*100:6.1f}% {psnr(img, rec):9.2f}")
+
+    rec_full = idwt2(pyr, wavelet="cdf97", scheme="ns-polyconv")
+    print(f"lossless roundtrip max err: "
+          f"{float(jnp.max(jnp.abs(rec_full - img))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model for a few
+hundred steps on CPU with the full production stack (pipeline, AdamW,
+checkpointing, optional DWT gradient compression).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--compress]
+    [--arch qwen2-0.5b]
+
+Loss decreasing on the synthetic bigram-structured stream demonstrates the
+whole training path end to end; with --compress, gradients go through the
+paper's DWT (LL_2 subband + error feedback) before the update.
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import make_pipeline
+from repro.runtime.train_loop import train
+
+# ~100M-param qwen2-family config (scaled-down width/depth, real vocab)
+LM100M = ModelConfig(
+    arch_id="qwen2-100m",
+    family="dense",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=2048,
+    vocab_size=65_536,
+    qkv_bias=True,
+    tied_embeddings=True,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen2-100m",
+                    help="qwen2-100m or any registry id (smoke config)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--compress", action="store_true",
+                    help="DWT gradient compression (levels=2, CDF 9/7)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.arch == "qwen2-100m":
+        cfg = LM100M
+        _, run = get_config("qwen2-0.5b")
+    else:
+        cfg, run = get_config(args.arch, smoke=True)
+    run = dataclasses.replace(
+        run, grad_accum=1, lr=1e-3, warmup_steps=20,
+        total_steps=args.steps, checkpoint_every=100,
+        checkpoint_dir=args.ckpt_dir,
+        grad_compression="dwt:2" if args.compress else "none")
+
+    print(f"arch={cfg.arch_id}  params~{cfg.n_params()/1e6:.1f}M  "
+          f"compression={run.grad_compression}")
+    shape = ShapeConfig("train_example", "train", args.seq, args.batch)
+    pipe = make_pipeline(cfg, seed=run.seed)
+    res = train(cfg, run, pipe, shape, num_steps=args.steps, log_every=20)
+
+    first = sum(res.losses[:10]) / max(len(res.losses[:10]), 1)
+    last = sum(res.losses[-10:]) / max(len(res.losses[-10:]), 1)
+    print(f"\nloss: first10={first:.4f} -> last10={last:.4f} "
+          f"({'DECREASED' if last < first else 'NO PROGRESS'})")
+
+
+if __name__ == "__main__":
+    main()

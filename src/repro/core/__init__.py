@@ -1,0 +1,15 @@
+"""Core library: the paper's non-separable 2-D DWT schemes in JAX."""
+from repro.core.wavelets import WAVELETS, get_wavelet, CDF53, CDF97, DD137
+from repro.core.schemes import (SCHEMES, build_scheme, build_inverse_scheme,
+                                forward, inverse, to_planes, from_planes)
+from repro.core.optimize import build_optimized, forward_optimized, table1_ops
+from repro.core.transform import (dwt2, idwt2, Pyramid, flatten_pyramid,
+                                  unflatten_pyramid)
+
+__all__ = [
+    "WAVELETS", "get_wavelet", "CDF53", "CDF97", "DD137",
+    "SCHEMES", "build_scheme", "build_inverse_scheme", "forward", "inverse",
+    "to_planes", "from_planes",
+    "build_optimized", "forward_optimized", "table1_ops",
+    "dwt2", "idwt2", "Pyramid", "flatten_pyramid", "unflatten_pyramid",
+]

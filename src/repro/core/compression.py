@@ -1,0 +1,127 @@
+"""Wavelet gradient compression with error feedback (phase-cycled).
+
+The framework integration of the paper's transform: before the cross-pod
+data-parallel all-reduce, every gradient tensor is laid out as a 2-D tile
+and transformed with an L-level 2-D DWT (the paper's ns-polyconv scheme).
+Each step transmits a **1/4^L slice of the coefficient pyramid**, cycling
+the slice phase every step so that all coefficients are exchanged once
+per 4^L steps; a local error-feedback accumulator carries what was not
+yet transmitted:
+
+    e      <- e + g                     (accumulate incoming gradient)
+    g_hat  <- D_p(AllReduce(C_p(e)))    (slice p of the pyramid only)
+    e      <- e - g_hat                 (residual stays local)
+
+Why the cycling matters: with a *fixed* subspace (e.g. always LL_L), the
+component of g orthogonal to the subspace is never transmitted and the
+error accumulator grows linearly — verified by test before the fix.  With
+phase cycling the compressor covers the full space every cycle, the
+residual stays bounded, and the long-run transmitted average equals g
+(tests/test_compression.py).  Because wavelet energy compaction
+concentrates gradient mass in the low-pass phases, the first slice of
+each cycle carries most of the energy — that is where the paper's
+transform earns its place over naive chunk-cycling.
+
+Collective-byte arithmetic (§Perf): cross-pod gradient bytes shrink by
+4^L per step (L=2 -> 16x) at the cost of one forward+inverse DWT per
+tensor per step — a few memory-bound passes over gradient bytes, far
+cheaper than DCN all-reduce time at any realistic inter-pod bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes as S
+from repro.core import transform as T
+
+WIDTH = 256  # 2-D tile width for flattened gradients
+SCHEME = "ns-polyconv"
+
+
+def _tile_2d(g: jax.Array, levels: int) -> Tuple[jax.Array, int]:
+    """Flatten to (H, WIDTH) with H divisible by (2^levels * 4^levels) so
+    both the transform and the phase slicing are exact."""
+    n = g.size
+    block = (1 << levels) * (4 ** levels)
+    h = -(-n // WIDTH)
+    h = -(-h // block) * block
+    flat = jnp.ravel(g.astype(jnp.float32))
+    flat = jnp.pad(flat, (0, h * WIDTH - n))
+    return flat.reshape(h, WIDTH), n
+
+
+def n_phases(levels: int) -> int:
+    return 4 ** levels
+
+
+def compress(g: jax.Array, phase, levels: int = 2,
+             wavelet: str = "cdf97") -> jax.Array:
+    """Gradient tensor -> one 1/4^L slice of its coefficient pyramid.
+
+    ``phase`` may be a traced int32 (e.g. ``step % 4**levels``).
+    """
+    tile, _ = _tile_2d(g, levels)
+    pyr = T.dwt2(tile, wavelet=wavelet, levels=levels, scheme=SCHEME)
+    flat = T.flatten_pyramid(pyr)
+    p = n_phases(levels)
+    rows = flat.shape[0] // p
+    return jax.lax.dynamic_slice_in_dim(flat, phase * rows, rows, 0)
+
+
+def decompress(sl: jax.Array, phase, shape, levels: int = 2,
+               wavelet: str = "cdf97") -> jax.Array:
+    """Pyramid slice -> gradient tensor (other phases zero)."""
+    n = 1
+    for d in shape:
+        n *= d
+    p = n_phases(levels)
+    rows = sl.shape[0]
+    flat = jnp.zeros((rows * p, sl.shape[1]), sl.dtype)
+    flat = jax.lax.dynamic_update_slice_in_dim(flat, sl, phase * rows, 0)
+    pyr = T.unflatten_pyramid(flat, levels)
+    tile = T.idwt2(pyr, wavelet=wavelet, scheme=SCHEME)
+    return jnp.ravel(tile)[:n].reshape(shape)
+
+
+def compressed_bytes_ratio(levels: int) -> float:
+    return 1.0 / (4 ** levels)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback state
+# ---------------------------------------------------------------------------
+
+def init_error_feedback(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, errors, step=0, levels: int = 2,
+                           wavelet: str = "cdf97",
+                           reduce_fn=None):
+    """Returns (decompressed grads, new error state).
+
+    ``reduce_fn`` (e.g. ``lambda x: lax.pmean(x, 'pod')``) is applied to
+    the *compressed* slice — that is the collective whose bytes shrink by
+    4^levels.  ``step`` selects the pyramid phase (cycled).
+    """
+    phase = jnp.asarray(step, jnp.int32) % n_phases(levels)
+
+    def one(g, e):
+        acc = e + g.astype(jnp.float32)
+        c = compress(acc, phase, levels, wavelet)
+        if reduce_fn is not None:
+            c = reduce_fn(c)
+        g_hat = decompress(c, phase, g.shape, levels, wavelet)
+        return g_hat.astype(g.dtype), acc - g_hat
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+    return new_g, new_e

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's DWT schemes.
+
+Layout: ``polyphase.py`` is the generic engine (pallas_call + BlockSpec +
+manual-DMA halo windows); ``<scheme>.py`` are the named per-scheme drivers;
+``ops.py`` the jit'd dispatch; ``ref.py`` the independent filter-bank
+oracle.
+"""
+from repro.kernels.ops import apply_scheme_pallas, scheme_stats
+from repro.kernels.ref import dwt2_ref, idwt2_ref

@@ -1,0 +1,25 @@
+"""Non-separable convolution Pallas kernel (paper Section 4, Figure 3).
+
+The full 2-D polyphase matrix N = N^V N^H applied in a SINGLE pallas_call:
+one HBM round trip (1 step vs. the separable convolution's 2), at the cost
+of the largest filters (9x9 ... 7x7 for CDF 9/7; the Section 5 optimized
+variant reduces 256 -> 152 MACs/quad).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import schemes as S
+from repro.core import optimize as O
+from repro.kernels import polyphase as PP
+
+SCHEME = "ns-conv"
+
+
+def forward(x: jax.Array, wavelet: str = "cdf97", *, optimize: bool = False,
+            block=(256, 512), interpret=None):
+    sch = (O.build_optimized(wavelet, SCHEME) if optimize
+           else S.build_scheme(wavelet, SCHEME))
+    return PP.apply_steps_pallas(PP.steps_of(sch), S.to_planes(x),
+                                 fuse="none", block=block,
+                                 interpret=interpret)

@@ -1,0 +1,27 @@
+"""Non-separable lifting Pallas kernel (paper Section 4, Figure 5).
+
+Two spatial steps per predict/update pair:  S_U | T_P  with
+
+    T_P = [[1,0,0,0],[P,1,0,0],[P*,0,1,0],[PP*,P*,P,1]]
+    S_U = [[1,U,U*,UU*],[0,1,0,U*],[0,0,1,U],[0,0,0,1]]
+
+i.e. 2 pallas_calls (HBM round trips) per pair vs. the separable lifting's
+4 — the paper's step-halving applied to the lifting structure.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import schemes as S
+from repro.core import optimize as O
+from repro.kernels import polyphase as PP
+
+SCHEME = "ns-lifting"
+
+
+def forward(x: jax.Array, wavelet: str = "cdf97", *, optimize: bool = False,
+            fuse: str = "none", block=(256, 512), interpret=None):
+    sch = (O.build_optimized(wavelet, SCHEME) if optimize
+           else S.build_scheme(wavelet, SCHEME))
+    return PP.apply_steps_pallas(PP.steps_of(sch), S.to_planes(x),
+                                 fuse=fuse, block=block, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Non-separable polyconvolution Pallas kernel (paper Section 4, Figure 4).
+
+One pallas_call per predict/update pair applying
+
+    N_{P,U} = [[V*V, V*U, U*V, U*U],
+               [V*P, V*,  U*P, U* ],
+               [P*V, P*U, V,   U  ],
+               [P*P, P*,  P,   1  ]],   V = PU + 1.
+
+For CDF 9/7 (K=2): 2 steps with 5x5...3x3 filters — half the operations of
+the non-separable convolution.  "Makes sense only when K > 1" (paper §5):
+for K=1 wavelets this degenerates to the non-separable convolution.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import schemes as S
+from repro.core import optimize as O
+from repro.kernels import polyphase as PP
+
+SCHEME = "ns-polyconv"
+
+
+def forward(x: jax.Array, wavelet: str = "cdf97", *, optimize: bool = False,
+            fuse: str = "none", block=(256, 512), interpret=None):
+    sch = (O.build_optimized(wavelet, SCHEME) if optimize
+           else S.build_scheme(wavelet, SCHEME))
+    return PP.apply_steps_pallas(PP.steps_of(sch), S.to_planes(x),
+                                 fuse=fuse, block=block, interpret=interpret)

@@ -1,0 +1,68 @@
+"""Public jit'd wrappers for the Pallas DWT kernels.
+
+``apply_scheme_pallas`` is the single dispatch point used by
+``repro.core.transform`` (backend="pallas"), the benchmarks and the tests.
+Scheme construction happens at trace time (static args); only the plane
+arithmetic is traced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimize as O
+from repro.core import schemes as S
+from repro.kernels import polyphase as PP
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("wavelet", "scheme", "optimize", "inverse", "fuse",
+                     "block", "interpret"))
+def apply_scheme_pallas(x, *, wavelet: str = "cdf97",
+                        scheme: str = "ns-polyconv",
+                        optimize: bool = False,
+                        inverse: bool = False,
+                        fuse: str = "none",
+                        block: Tuple[int, int] = (256, 512),
+                        interpret: Optional[bool] = None):
+    """Single-level 2-D DWT step sequence on TPU via Pallas.
+
+    Forward: ``x`` is an image (H, W) -> returns (LL, HL, LH, HH) planes.
+    Inverse: ``x`` is the 4-tuple of planes -> returns the image.
+    """
+    if inverse:
+        sch = S.build_inverse_scheme(wavelet, scheme)
+        steps = PP.steps_of(sch)
+        planes = tuple(x)
+        out = PP.apply_steps_pallas(steps, planes, fuse=fuse, block=block,
+                                    interpret=interpret)
+        return S.from_planes(out)
+    sch = (O.build_optimized(wavelet, scheme) if optimize
+           else S.build_scheme(wavelet, scheme))
+    steps = PP.steps_of(sch)
+    planes = S.to_planes(x)
+    return PP.apply_steps_pallas(steps, planes, fuse=fuse, block=block,
+                                 interpret=interpret)
+
+
+def scheme_stats(wavelet: str, scheme: str, optimize: bool,
+                 shape: Tuple[int, int], itemsize: int = 4,
+                 fuse: str = "none") -> dict:
+    """Step count / op count / ideal HBM bytes for the roofline model."""
+    sch = (O.build_optimized(wavelet, scheme) if optimize
+           else S.build_scheme(wavelet, scheme))
+    steps = PP.steps_of(sch)
+    calls = 1 if fuse == "scheme" else len(steps)
+    return {
+        "wavelet": wavelet,
+        "scheme": scheme + ("+opt" if optimize else ""),
+        "fuse": fuse,
+        "steps": len(steps),
+        "pallas_calls": calls,
+        "ops": sch.num_ops,
+        "hbm_bytes": PP.scheme_hbm_bytes(steps, shape, itemsize, fuse=fuse),
+    }

@@ -1,0 +1,232 @@
+"""Generic Pallas TPU kernel for polyphase-matrix DWT steps.
+
+TPU adaptation of the paper's execution model (DESIGN.md §2):
+
+* one scheme *step* (barrier)  ->  one ``pl.pallas_call``: the four
+  polyphase planes make one full round trip through HBM;
+* GPU on-chip shared memory     ->  a VMEM scratch window per plane, filled
+  by an explicit ``pltpu.make_async_copy`` DMA of the block + halo from a
+  wrap-padded HBM plane (inputs are kept in ``ANY`` memory space);
+* GPU threads                   ->  the 8x128 VPU vector lanes; every filter
+  tap lowers to one shifted static slice + multiply-add over the whole
+  block, so the per-pixel MAC count *is* the paper's operation count;
+* the Section 5 optimization    ->  constant (halo-0) matrices are applied
+  elementwise on the loaded window (pre) or on the output block (post),
+  adding no halo and no HBM traffic — "computed without any barrier".
+
+Beyond the paper, ``fuse="scheme"`` executes *all* steps of a scheme in a
+single ``pallas_call`` using overlapped-tile recompute: the window is loaded
+with the compound halo (sum of per-step halos) and each step shrinks the
+valid region.  On a GPU this is impossible (threads cannot exchange halo
+values without a barrier); on TPU the halo is simply recomputed locally,
+reducing *every* scheme to one HBM round trip.  See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import poly as P
+from repro.core import optimize as O
+from repro.core import schemes as S
+
+# CPU containers run kernels through the interpreter; on real TPUs this
+# resolves to False and the Mosaic pipeline compiles the kernel.
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """Matrices of one barrier-delimited step (hashable, static)."""
+
+    pre: Tuple[P.Matrix, ...]
+    main: Optional[P.Matrix]
+    post: Tuple[P.Matrix, ...]
+
+    @property
+    def halo(self) -> int:
+        return P.matrix_halo(self.main) if self.main is not None else 0
+
+
+def steps_of(scheme_obj) -> List[StepSpec]:
+    """Normalize a Scheme / OptScheme into a list of StepSpecs."""
+    if isinstance(scheme_obj, O.OptScheme):
+        return [StepSpec(tuple(st.pre), st.main, tuple(st.post))
+                for st in scheme_obj.steps]
+    return [StepSpec((), m, ()) for m, _ in scheme_obj.steps]
+
+
+# ---------------------------------------------------------------------------
+# In-window algebra (traced inside the kernel; all slices static)
+# ---------------------------------------------------------------------------
+
+def _apply_matrix_windows(m: P.Matrix, xs: Sequence[jax.Array], h: int
+                          ) -> List[jax.Array]:
+    """Apply a polyphase matrix to four equally-shaped windows.
+
+    ``h`` is the halo consumed by this matrix: outputs are smaller by 2h on
+    each axis.  Tap (km, kn) of entry (i, j) reads
+    ``xs[j][h - kn : h - kn + oh, h - km : h - km + ow]``
+    (y[n] = sum_k g_k x[n-k]).
+    """
+    oh = xs[0].shape[0] - 2 * h
+    ow = xs[0].shape[1] - 2 * h
+    outs: List[jax.Array] = []
+    for i in range(4):
+        acc = None
+        for j in range(4):
+            for (km, kn), c in sorted(m[i][j].items()):
+                r0, c0 = h - kn, h - km
+                term = xs[j][r0:r0 + oh, c0:c0 + ow]
+                if not (i == j and (km, kn) == (0, 0) and c == 1.0):
+                    term = term * c
+                acc = term if acc is None else acc + term
+        outs.append(acc if acc is not None
+                    else jnp.zeros((oh, ow), xs[0].dtype))
+    return outs
+
+
+def _apply_steps_windows(steps: Sequence[StepSpec], xs: Sequence[jax.Array]
+                         ) -> List[jax.Array]:
+    """Run a fused step sequence over windows, shrinking by each halo."""
+    cur = list(xs)
+    for st in steps:
+        for m in st.pre:
+            cur = _apply_matrix_windows(m, cur, 0)
+        if st.main is not None:
+            cur = _apply_matrix_windows(st.main, cur, st.halo)
+        for m in st.post:
+            cur = _apply_matrix_windows(m, cur, 0)
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# The pallas_call
+# ---------------------------------------------------------------------------
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (block must tile the plane)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
+                       block: Tuple[int, int], interpret: Optional[bool],
+                       compute_dtype=jnp.float32):
+    """One pallas_call executing ``steps`` (fused) over the four planes."""
+    if interpret is None:
+        interpret = _default_interpret()
+    r_total = sum(st.halo for st in steps)
+    hp, wp = planes[0].shape
+    bh = _pick_block(hp, block[0])
+    bw = _pick_block(wp, block[1])
+    grid = (hp // bh, wp // bw)
+    out_dtype = planes[0].dtype
+
+    if r_total > 0:
+        padded = [jnp.pad(p, r_total, mode="wrap") for p in planes]
+    else:
+        padded = list(planes)
+
+    win = (bh + 2 * r_total, bw + 2 * r_total)
+
+    def kernel(*refs):
+        x_refs = refs[:4]
+        o_refs = refs[4:8]
+        scratch = refs[8:12]
+        sems = refs[12]
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        copies = []
+        for k in range(4):
+            cp = pltpu.make_async_copy(
+                x_refs[k].at[pl.ds(i * bh, win[0]), pl.ds(j * bw, win[1])],
+                scratch[k],
+                sems.at[k],
+            )
+            cp.start()
+            copies.append(cp)
+        for cp in copies:
+            cp.wait()
+        xs = [s[:, :].astype(compute_dtype) for s in scratch]
+        ys = _apply_steps_windows(steps, xs)
+        for k in range(4):
+            o_refs[k][:, :] = ys[k].astype(out_dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY) for _ in range(4)],
+        out_specs=[pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((hp, wp), out_dtype)
+                   for _ in range(4)],
+        scratch_shapes=[pltpu.VMEM(win, planes[0].dtype) for _ in range(4)]
+        + [pltpu.SemaphoreType.DMA((4,))],
+        interpret=interpret,
+    )(*padded)
+    return tuple(out)
+
+
+def apply_steps_pallas(steps: Sequence[StepSpec], planes, *,
+                       fuse: str = "none",
+                       block: Tuple[int, int] = (256, 512),
+                       interpret: Optional[bool] = None,
+                       compute_dtype=jnp.float32):
+    """Execute a scheme's steps on the four polyphase planes.
+
+    fuse="none"   — paper-faithful: one pallas_call (HBM round trip) per
+                    step; the step count is the paper's barrier count.
+    fuse="scheme" — beyond-paper: a single pallas_call with compound halo
+                    (overlapped-tile recompute).
+    """
+    steps = tuple(steps)
+    if fuse == "scheme":
+        return _steps_pallas_call(steps, planes, block=block,
+                                  interpret=interpret,
+                                  compute_dtype=compute_dtype)
+    if fuse != "none":
+        raise ValueError(f"unknown fuse mode {fuse!r}")
+    for st in steps:
+        planes = _steps_pallas_call((st,), planes, block=block,
+                                    interpret=interpret,
+                                    compute_dtype=compute_dtype)
+    return planes
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic model (used by the roofline benchmarks)
+# ---------------------------------------------------------------------------
+
+def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
+                     itemsize: int, fuse: str = "none",
+                     block: Tuple[int, int] = (256, 512)) -> int:
+    """Ideal HBM bytes moved by the kernel sequence on a (H, W) image.
+
+    Per pallas_call: read 4 planes (block+halo windows, overlap counted)
+    + write 4 planes.  The wrap padding copy is excluded — production
+    kernels fold it into wrapped corner DMAs; it is identical across
+    schemes and does not change the comparison.
+    """
+    h, w = shape
+    hp, wp = h // 2, w // 2
+    bh = _pick_block(hp, block[0])
+    bw = _pick_block(wp, block[1])
+    total = 0
+    groups = [steps] if fuse == "scheme" else [[st] for st in steps]
+    for g in groups:
+        r = sum(st.halo for st in g)
+        read = 4 * (hp // bh) * (wp // bw) * (bh + 2 * r) * (bw + 2 * r)
+        write = 4 * hp * wp
+        total += (read + write) * itemsize
+    return total

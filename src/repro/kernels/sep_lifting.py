@@ -1,0 +1,23 @@
+"""Separable lifting Pallas kernel — fewest MACs, most HBM round trips.
+
+4 pallas_calls per predict/update pair: S_U^V | S_U^H | T_P^V | T_P^H.
+On a memory-bound platform the barrier count dominates; this kernel is the
+"many cheap steps" end of the paper's trade-off space.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import schemes as S
+from repro.core import optimize as O
+from repro.kernels import polyphase as PP
+
+SCHEME = "sep-lifting"
+
+
+def forward(x: jax.Array, wavelet: str = "cdf97", *, optimize: bool = False,
+            fuse: str = "none", block=(256, 512), interpret=None):
+    sch = (O.build_optimized(wavelet, SCHEME) if optimize
+           else S.build_scheme(wavelet, SCHEME))
+    return PP.apply_steps_pallas(PP.steps_of(sch), S.to_planes(x),
+                                 fuse=fuse, block=block, interpret=interpret)

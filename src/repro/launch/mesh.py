@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — only ``dryrun.py`` (which sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import) ever builds the full production meshes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+    pure data parallelism over DCN (DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4, *,
+                    multi_pod: bool = False):
+    """Small mesh for tests (8 host devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct input specs for every (architecture x shape) cell.
+
+Nothing here allocates device memory: batches, parameter trees, optimizer
+states and decode caches are all ``jax.eval_shape``-derived stand-ins that
+the dry-run lowers against.  The modality frontends of whisper/pixtral are
+stubs — their specs are precomputed frame/patch embeddings, per the
+assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import common as C
+from repro.models import lm
+from repro.runtime import steps
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Input-batch ShapeDtypeStructs for one shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    emb = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bfloat16)
+
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {"enc_embeds": emb((b, s, cfg.d_model)),
+                    "dec_tokens": tok((b, cfg.max_target_len))}
+        if shape.kind == "prefill":
+            return {"enc_embeds": emb((b, s, cfg.d_model))}
+        return {"tokens": tok((b, 1))}
+
+    if shape.kind == "decode":
+        return {"tokens": tok((b, 1))}
+    batch: Dict[str, Any] = {"tokens": tok((b, s))}
+    if cfg.family == "vlm" and cfg.frontend_stub and shape.kind == "train":
+        batch["patch_embeds"] = emb((b, min(1024, s // 4), cfg.d_model))
+    return batch
+
+
+def state_specs(cfg: ModelConfig, run: RunConfig):
+    """TrainState ShapeDtypeStructs via eval_shape (no allocation)."""
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda r: steps.init_train_state(r, cfg, run), rng)
+
+
+def params_specs(cfg: ModelConfig):
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda r: lm.init_params(r, cfg), rng)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: lm.init_decode_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig
+                ) -> Tuple[Any, ...]:
+    """All inputs for the step function this cell lowers.
+
+    train  -> (TrainState, batch)
+    prefill-> (params, batch)
+    decode -> (params, cache, tokens)
+    """
+    if shape.kind == "train":
+        return (state_specs(cfg, run), batch_specs(cfg, shape))
+    if shape.kind == "prefill":
+        return (params_specs(cfg), batch_specs(cfg, shape))
+    return (params_specs(cfg), cache_specs(cfg, shape),
+            batch_specs(cfg, shape)["tokens"])

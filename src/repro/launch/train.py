@@ -1,0 +1,67 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b \
+        --shape train_4k --steps 1000 [--smoke] [--compress dwt:2]
+
+On a real cluster this process runs per host under
+``jax.distributed.initialize()`` (coordinator address from the scheduler);
+on this container it runs the smoke config single-process.  XLA flags for
+collective overlap (latency-hiding scheduler) are set here so the
+backward all-reduces overlap the remaining backward compute.
+"""
+import argparse
+import dataclasses
+import os
+
+# Collective/compute overlap: enable XLA's latency-hiding scheduler on
+# real backends.  Set before jax import.
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_enable_async_all_gather=true")
+
+from repro.configs.base import ALL_SHAPES, ShapeConfig  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.data.pipeline import make_pipeline  # noqa: E402
+from repro.runtime.train_loop import train  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--compress", default="none",
+                    help="gradient compression, e.g. dwt:2")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="override global batch (smoke runs)")
+    ap.add_argument("--seq", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, run = get_config(args.arch, smoke=args.smoke)
+    run = dataclasses.replace(run, grad_compression=args.compress,
+                              checkpoint_dir=args.ckpt_dir,
+                              total_steps=args.steps)
+    if args.smoke:
+        run = dataclasses.replace(run, grad_accum=1)
+    shape = next(s for s in ALL_SHAPES if s.name == args.shape)
+    if args.batch or args.seq:
+        shape = ShapeConfig(shape.name, shape.kind,
+                            args.seq or shape.seq_len,
+                            args.batch or shape.global_batch)
+    elif args.smoke:
+        shape = ShapeConfig(shape.name, shape.kind, 256, 8)
+
+    pipe = make_pipeline(cfg, seed=run.seed)
+    res = train(cfg, run, pipe, shape, num_steps=args.steps)
+    print(f"done: {res.steps_run} steps, final loss {res.final_loss:.4f}"
+          + (f" (resumed from {res.restored_from})"
+             if res.restored_from is not None else ""))
+
+
+if __name__ == "__main__":
+    main()

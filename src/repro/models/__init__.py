@@ -1,0 +1,4 @@
+from repro.models import attention, common, lm, moe, rwkv, ssm
+from repro.models.lm import (decode_step, forward, init_decode_cache,
+                             init_params, whisper_decode_step,
+                             whisper_forward, whisper_prefill)

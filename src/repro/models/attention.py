@@ -1,0 +1,202 @@
+"""GQA / MQA / sliding-window attention with chunked (flash-style) scoring
+and a KV-cache decode path.
+
+Training/prefill never materializes the full (S, S) score matrix: queries
+are processed in chunks via ``lax.scan`` (memory O(chunk * S) per layer,
+which remat bounds further).  Decode computes one query position against
+the cache.  Sliding-window attention bounds both the mask and — in the
+decode path — the cache itself (ring buffer), which is what makes
+mixtral's long_500k cell sub-quadratic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+
+Params = Dict[str, Any]
+
+Q_CHUNK = 512
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, kv, hd = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    h, hp = cfg.n_heads, cfg.n_heads_padded
+    dt = C.pdtype(cfg)
+    ks = C.split_keys(key, ["wq", "wk", "wv", "wo"])
+    wq = C.dense_init(ks["wq"], (d, hp, hd), dt)
+    wo = C.dense_init(ks["wo"], (hp, hd, d), dt, fan_in=h * hd)
+    if hp != h:  # TP padding heads are zero-init (mathematically inert)
+        mask = (jnp.arange(hp) < h).astype(dt)
+        wq = wq * mask[None, :, None]
+        wo = wo * mask[:, None, None]
+    p = {"wq": wq,
+         "wk": C.dense_init(ks["wk"], (d, kv, hd), dt),
+         "wv": C.dense_init(ks["wv"], (d, kv, hd), dt),
+         "wo": wo}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, hd), dt)
+        p["bk"] = jnp.zeros((kv, hd), dt)
+        p["bv"] = jnp.zeros((kv, hd), dt)
+    return p
+
+
+def _project_qkv(params: Params, x: jax.Array, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return q, k, v
+
+
+def _scores_softmax_value(q, k, v, mask, cfg: ModelConfig):
+    """q: (B, C, H, hd); k/v: (B, S, KV, hd); mask: (C, S) bool."""
+    groups = cfg.n_heads_padded // cfg.n_kv_heads
+    b, c, h, hd = q.shape
+    s = k.shape[1]
+    qg = q.reshape(b, c, cfg.n_kv_heads, groups, hd)
+    scores = jnp.einsum("bckgh,bskh->bkgcs", qg, k) / jnp.sqrt(hd).astype(
+        q.dtype)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                       -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgcs,bskh->bckgh", probs, v)
+    return out.reshape(b, c, cfg.n_heads_padded, hd)
+
+
+def attend(params: Params, x: jax.Array, cfg: ModelConfig, *,
+           positions: Optional[jax.Array] = None,
+           causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill), q-chunked.
+
+    x: (B, S, D) -> (B, S, D).
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg)
+    if cfg.rope_theta:
+        q = C.apply_rope(q, positions, cfg)
+        k = C.apply_rope(k, positions, cfg)
+
+    chunk = min(Q_CHUNK, s)
+    n_chunks = (s + chunk - 1) // chunk
+    pad = n_chunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = q.reshape(b, n_chunks, chunk, cfg.n_heads_padded,
+                   cfg.head_dim)
+    key_pos = jnp.arange(s)
+
+    def chunk_fn(_, inputs):
+        qc, c_idx = inputs
+        qpos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, s), bool)
+        if causal:
+            mask = qpos[:, None] >= key_pos[None, :]
+            if cfg.sliding_window:
+                mask &= key_pos[None, :] > qpos[:, None] - cfg.sliding_window
+        out = _scores_softmax_value(qc, k, v, mask, cfg)
+        return None, out
+
+    # rematerialize scores/probs in the backward pass — the (C, S) score
+    # block is the big flash-attention buffer and must never be a scan
+    # residual (it alone would be O(S^2/chunk) live memory).
+    chunk_fn = jax.checkpoint(
+        chunk_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(
+        chunk_fn, None,
+        (jnp.moveaxis(qs, 1, 0), jnp.arange(n_chunks)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * chunk,
+                                           cfg.n_heads_padded, cfg.head_dim)
+    out = out[:, :s]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Sliding-window archs only ever keep ``window`` keys (ring buffer)."""
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Params:
+    """Per-layer KV cache (stacked over layers by the caller's scan)."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = dtype or C.cdtype(cfg)
+    length = cache_len(cfg, max_len)
+    return {
+        "k": jnp.zeros((batch, length, kv, hd), dt),
+        "v": jnp.zeros((batch, length, kv, hd), dt),
+    }
+
+
+def decode_attend(params: Params, cache: Params, x: jax.Array,
+                  pos: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, Params]:
+    """One-token decode step.
+
+    x: (B, 1, D); pos: () current position.  Returns (out, new_cache).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg)
+    positions = jnp.full((b, 1), pos)
+    if cfg.rope_theta:
+        q = C.apply_rope(q, positions, cfg)
+        k = C.apply_rope(k, positions, cfg)
+
+    length = cache["k"].shape[1]
+    if cfg.sliding_window:
+        slot = pos % length          # ring buffer
+    else:
+        slot = jnp.minimum(pos, length - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+
+    key_idx = jnp.arange(length)
+    if cfg.sliding_window:
+        # ring buffer: valid entries are the last min(pos+1, length) writes
+        age = (slot - key_idx) % length
+        valid = age < jnp.minimum(pos + 1, length)
+    else:
+        valid = key_idx <= pos
+    mask = valid[None, :]  # (1, length)
+
+    out = _scores_softmax_value(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+def prefill_attend(params: Params, cache: Params, x: jax.Array,
+                   cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """Prefill: full causal attention + populate the cache.
+
+    For sliding-window configs only the trailing ``window`` keys are kept.
+    """
+    y = attend(params, x, cfg, causal=True)
+    q, k, v = _project_qkv(params, x, cfg)
+    if cfg.rope_theta:
+        s = x.shape[1]
+        k = C.apply_rope(k, jnp.arange(s)[None, :], cfg)
+    length = cache["k"].shape[1]
+    k_keep = k[:, -length:].astype(cache["k"].dtype)
+    v_keep = v[:, -length:].astype(cache["v"].dtype)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_keep, (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_keep, (0, 0, 0, 0))
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,225 @@
+"""Shared model components: init helpers, norms, RoPE, MLPs.
+
+All models are functional: parameters are nested dicts of jnp arrays,
+layers are stacked on a leading axis and driven by ``jax.lax.scan``
+(bounded compile time at any depth — granite's 88 layers compile as one
+block), and every function takes the config explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    """Truncated-normal init scaled by 1/sqrt(fan_in)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraint
+# ---------------------------------------------------------------------------
+
+# Korthikanti-style sequence parallelism: between blocks, activations are
+# additionally sharded over 'model' on the sequence dim, turning the TP
+# all-reduces into reduce-scatter + all-gather pairs (half the wire
+# bytes).  Toggled by the launcher (RunConfig.seq_parallel).
+SEQ_PARALLEL = False
+
+
+def shard_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 (batch) to the (pod, data) mesh axes.
+
+    GSPMD propagation sometimes prefers replicating the batch and sharding
+    d_model through the layer stack (catastrophic for attention memory);
+    one constraint per block keeps the batch sharded everywhere.  No-op
+    outside a mesh context or when the batch does not divide.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not am.axis_names or x.ndim < 2:
+        return x
+    shape = dict(zip(am.axis_names, am.axis_sizes))
+    # skip axes that are Manual in this context (inside shard_map the pod
+    # axis is already split; constraints may only name Auto axes)
+    types = {}
+    for attr in ("_name_to_type",):
+        types = dict(getattr(am, attr, {}) or {})
+        if types:
+            break
+    if not types and hasattr(am, "axis_types"):
+        types = dict(zip(am.axis_names, am.axis_types))
+    shape = {a: s for a, s in shape.items()
+             if "Manual" not in str(types.get(a, ""))}
+    axes = [a for a in ("pod", "data") if a in shape]
+    if not axes:
+        return x
+    size = 1
+    for a in axes:
+        size *= shape[a]
+    if x.shape[0] % size != 0:
+        if "data" in shape and x.shape[0] % shape["data"] == 0:
+            axes = ["data"]
+        else:
+            return x
+    from jax.sharding import PartitionSpec as _P
+    rest = [None] * (x.ndim - 1)
+    if SEQ_PARALLEL and x.ndim >= 3 and "model" in shape \
+            and x.shape[1] % shape["model"] == 0:
+        rest[0] = "model"
+    spec = _P(tuple(axes), *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_batch_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda a: shard_batch(a) if hasattr(a, "ndim") else a, tree)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (supports partial rotary fraction, phi-4-mini style)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    rot = int(cfg.head_dim * cfg.rope_fraction) // 2 * 2
+    exponent = jnp.arange(0, rot, 2, dtype=jnp.float32) / rot
+    return 1.0 / (cfg.rope_theta ** exponent)  # (rot/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig
+               ) -> jax.Array:
+    """x: (..., S, n, head_dim); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(cfg)
+    rot = freqs.shape[0] * 2
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,r/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([yr, xp], axis=-1) if xp.shape[-1] else yr
+
+
+def sinusoid_positions(length: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (length, d)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(length)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    dt = pdtype(cfg)
+    if cfg.act == "silu":  # SwiGLU: gate + up + down
+        ks = split_keys(key, ["gate", "up", "down"])
+        return {
+            "gate": dense_init(ks["gate"], (d, f), dt),
+            "up": dense_init(ks["up"], (d, f), dt),
+            "down": dense_init(ks["down"], (f, d), dt, fan_in=f),
+        }
+    ks = split_keys(key, ["up", "up_b", "down", "down_b"])
+    return {
+        "up": dense_init(ks["up"], (d, f), dt),
+        "up_b": jnp.zeros((f,), dt),
+        "down": dense_init(ks["down"], (f, d), dt, fan_in=f),
+        "down_b": jnp.zeros((d,), dt),
+    }
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.act == "silu":
+        g = x @ params["gate"].astype(dt)
+        u = x @ params["up"].astype(dt)
+        return (jax.nn.silu(g) * u) @ params["down"].astype(dt)
+    h = jax.nn.gelu(x @ params["up"].astype(dt) + params["up_b"].astype(dt))
+    return h @ params["down"].astype(dt) + params["down_b"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def pad_vocab(v: int, multiple: int = 2048) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    vp = pad_vocab(cfg.vocab_size)
+    dt = pdtype(cfg)
+    ks = split_keys(key, ["tok", "head"])
+    p = {"tok": dense_init(ks["tok"], (vp, cfg.d_model), dt,
+                           fan_in=cfg.d_model)}
+    if not cfg.tied_embeddings:
+        p["head"] = dense_init(ks["head"], (cfg.d_model, vp), dt)
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["tok"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    vp = pad_vocab(cfg.vocab_size)
+    w = (params["tok"].T if cfg.tied_embeddings else params["head"])
+    logits = x @ w.astype(x.dtype)
+    if vp != cfg.vocab_size:  # mask the padded vocabulary tail
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits

@@ -1,0 +1,574 @@
+"""Generic language-model assembly for all assigned architecture families.
+
+One ``init_params`` / ``forward`` / ``prefill`` / ``decode_step`` quartet
+covers dense, MoE, SSM (RWKV6), hybrid (zamba2), enc-dec (whisper) and VLM
+(pixtral) families.  Layers are stacked on a leading axis and driven by
+``lax.scan`` (compile time independent of depth); ``remat=True`` wraps the
+scanned block in ``jax.checkpoint`` so live activations stay O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import moe as M
+from repro.models import rwkv as R
+from repro.models import ssm as SS
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    ks = C.split_keys(key, ["attn", "ffn"])
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "attn": A.init_attention(ks["attn"], cfg),
+            "ln2": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "mlp": C.init_mlp(ks["ffn"], cfg),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "attn": A.init_attention(ks["attn"], cfg),
+            "ln2": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "moe": M.init_moe(ks["ffn"], cfg),
+        }
+    if cfg.family == "ssm":  # rwkv6
+        return {
+            "ln1": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "ln2": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "rwkv": R.init_rwkv_block(ks["attn"], cfg),
+        }
+    if cfg.family == "hybrid":  # zamba2 mamba backbone layer
+        return {
+            "ln1": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "mamba": SS.init_mamba(ks["attn"], cfg),
+        }
+    raise ValueError(cfg.family)
+
+
+def _stack(blocks):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = C.split_keys(key, ["embed", "blocks", "final", "shared", "enc"])
+    if cfg.family == "encdec":
+        return _init_whisper(key, cfg)
+    n = cfg.n_layers
+    bkeys = jax.random.split(ks["blocks"], n)
+    params: Params = {
+        "embed": C.init_embed(ks["embed"], cfg),
+        "blocks": _stack([_init_block(bkeys[i], cfg) for i in range(n)]),
+        "final_norm": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+    }
+    if cfg.family == "hybrid":
+        # zamba2: one *shared* attention+MLP block invoked periodically
+        skeys = C.split_keys(ks["shared"], ["attn", "ffn"])
+        params["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "attn": A.init_attention(skeys["attn"], cfg),
+            "ln2": jnp.ones((cfg.d_model,), C.pdtype(cfg)),
+            "mlp": C.init_mlp(skeys["ffn"], cfg),
+        }
+    return params
+
+
+def _init_whisper(key, cfg: ModelConfig) -> Params:
+    ks = C.split_keys(key, ["embed", "enc", "dec", "xattn"])
+    dt = C.pdtype(cfg)
+
+    def enc_block(k):
+        kk = C.split_keys(k, ["attn", "ffn"])
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln1b": jnp.zeros((cfg.d_model,), dt),
+            "attn": A.init_attention(kk["attn"], cfg),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "ln2b": jnp.zeros((cfg.d_model,), dt),
+            "mlp": C.init_mlp(kk["ffn"], cfg),
+        }
+
+    def dec_block(k):
+        kk = C.split_keys(k, ["attn", "xattn", "ffn"])
+        p = enc_block(k)
+        p["ln_x"] = jnp.ones((cfg.d_model,), dt)
+        p["ln_xb"] = jnp.zeros((cfg.d_model,), dt)
+        p["xattn"] = A.init_attention(kk["xattn"], cfg)
+        return p
+
+    ekeys = jax.random.split(ks["enc"], cfg.enc_layers)
+    dkeys = jax.random.split(ks["dec"], cfg.dec_layers)
+    return {
+        "embed": C.init_embed(ks["embed"], cfg),
+        "enc_blocks": _stack([enc_block(k) for k in ekeys]),
+        "dec_blocks": _stack([dec_block(k) for k in dkeys]),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "enc_norm_b": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm_b": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p: Params, x: jax.Array, cfg: ModelConfig
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss_delta)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm", "moe"):
+        h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + A.attend(p["attn"], h, cfg)
+        h = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, aux = M.moe_ffn(p["moe"], h, cfg)
+            return x + y, aux
+        return x + C.mlp(p["mlp"], h, cfg), zero
+    if cfg.family == "ssm":
+        h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, _, _ = R.time_mix(p["rwkv"], h, cfg)
+        x = x + y
+        h = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = R.channel_mix(p["rwkv"], h, cfg)
+        return x + y, zero
+    if cfg.family == "hybrid":
+        h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+        return x + SS.mamba_forward(p["mamba"], h, cfg), zero
+    raise ValueError(cfg.family)
+
+
+def _shared_attn_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + A.attend(p["attn"], h, cfg)
+    h = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + C.mlp(p["mlp"], h, cfg)
+
+
+def _scan_blocks(blocks: Params, x: jax.Array, cfg: ModelConfig,
+                 remat: bool, block_fn) -> Tuple[jax.Array, jax.Array]:
+    fn = lambda p, x: block_fn(p, x, cfg)  # close over the static config
+    if remat:
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, p):
+        x, aux = carry
+        x, d = fn(p, x)
+        return (C.shard_batch(x), aux + d), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def forward_hidden(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+                   embeds: Optional[jax.Array] = None,
+                   remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Backbone forward up to (and including) the final norm.
+
+    tokens: (B, S) int32 -> (hidden (B, S, D), aux_loss).  ``embeds``
+    (B, S_v, D), if given, replaces the token embeddings of the first S_v
+    positions (VLM/audio stub frontends).  The unembedding is kept
+    separate so losses can project to the (huge) vocab in chunks.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("use whisper_forward for encdec")
+    x = C.embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        sv = embeds.shape[1]
+        x = jnp.concatenate([embeds.astype(x.dtype), x[:, sv:]], axis=1)
+    x = C.shard_batch(x)
+
+    if cfg.family == "hybrid" and cfg.hybrid_period:
+        # group the mamba stack; apply the shared attention block between
+        # groups (compile time stays bounded: n_groups python iterations
+        # over a scanned sub-stack).
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, period, *a.shape[1:]),
+            params["blocks"])
+        aux = jnp.zeros((), jnp.float32)
+        for g in range(n_groups):
+            sub = jax.tree_util.tree_map(lambda a: a[g], grouped)
+            x = _shared_attn_fwd(params["shared_attn"], x, cfg)
+            x, d = _scan_blocks(sub, x, cfg, remat, _block_fwd)
+            aux = aux + d
+    else:
+        x, aux = _scan_blocks(params["blocks"], x, cfg, remat, _block_fwd)
+
+    x = C.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+            embeds: Optional[jax.Array] = None,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Causal LM forward: (B, S) -> (logits (B, S, Vp), aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg, embeds=embeds, remat=remat)
+    return C.unembed(params["embed"], x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder-decoder
+# ---------------------------------------------------------------------------
+
+def whisper_encode(params: Params, enc_embeds: jax.Array, cfg: ModelConfig,
+                   remat: bool = True) -> jax.Array:
+    """enc_embeds: (B, S_enc, D) stub frame embeddings (frontend is a stub
+    per the assignment; conv downsampling happens offline)."""
+    b, s, d = enc_embeds.shape
+    x = enc_embeds.astype(C.cdtype(cfg)) \
+        + C.sinusoid_positions(s, d).astype(C.cdtype(cfg))
+
+    def block(p, x, cfg):
+        h = C.layer_norm(x, p["ln1"], p["ln1b"], cfg.norm_eps)
+        x = x + A.attend(p["attn"], h, cfg, causal=False)
+        h = C.layer_norm(x, p["ln2"], p["ln2b"], cfg.norm_eps)
+        return x + C.mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_blocks(params["enc_blocks"], x, cfg, remat, block)
+    return C.layer_norm(x, params["enc_norm"], params["enc_norm_b"],
+                        cfg.norm_eps)
+
+
+def _whisper_dec_block(p, x, enc, cfg):
+    h = C.layer_norm(x, p["ln1"], p["ln1b"], cfg.norm_eps)
+    x = x + A.attend(p["attn"], h, cfg, causal=True)
+    h = C.layer_norm(x, p["ln_x"], p["ln_xb"], cfg.norm_eps)
+    x = x + _cross_attend(p["xattn"], h, enc, cfg)
+    h = C.layer_norm(x, p["ln2"], p["ln2b"], cfg.norm_eps)
+    return x + C.mlp(p["mlp"], h, cfg)
+
+
+def _cross_attend(p: Params, x: jax.Array, enc: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc.astype(dt), p["wv"].astype(dt))
+    mask = jnp.ones((x.shape[1], enc.shape[1]), bool)
+    out = A._scores_softmax_value(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def whisper_hidden(params: Params, enc_embeds: jax.Array,
+                   dec_tokens: jax.Array, cfg: ModelConfig,
+                   remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    enc = whisper_encode(params, enc_embeds, cfg, remat)
+    x = C.embed(params["embed"], dec_tokens, cfg)
+    x = x + C.sinusoid_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def block(p, x, cfg):
+        return _whisper_dec_block(p, x, enc, cfg), jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_blocks(params["dec_blocks"], x, cfg, remat, block)
+    x = C.layer_norm(x, params["final_norm"], params["final_norm_b"],
+                     cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def whisper_forward(params: Params, enc_embeds: jax.Array,
+                    dec_tokens: jax.Array, cfg: ModelConfig,
+                    remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    x, aux = whisper_hidden(params, enc_embeds, dec_tokens, cfg, remat)
+    return C.unembed(params["embed"], x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also populates the decode caches
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            max_len: int, *, embeds: Optional[jax.Array] = None,
+            remat: bool = True) -> Tuple[jax.Array, Params]:
+    """Returns (last-position logits (B, Vp), decode cache at pos=S)."""
+    b, s = tokens.shape
+    x = C.embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        sv = embeds.shape[1]
+        x = jnp.concatenate([embeds.astype(x.dtype), x[:, sv:]], axis=1)
+    x = C.shard_batch(x)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, p):
+            h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, kv = A.prefill_attend(
+                p["attn"], A.init_cache(cfg, b, max_len), h, cfg)
+            x = x + y
+            h = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = M.moe_ffn(p["moe"], h, cfg)
+                x = x + y
+            else:
+                x = x + C.mlp(p["mlp"], h, cfg)
+            return C.shard_batch(x), C.shard_batch_tree(kv)
+        fn = jax.checkpoint(body) if remat else body
+        x, kvs = jax.lax.scan(fn, x, params["blocks"])
+        cache = {"kv": kvs, "pos": jnp.asarray(s, jnp.int32)}
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, wkv, tshift = R.time_mix(p["rwkv"], h, cfg)
+            x = x + y
+            h2 = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+            y, cshift = R.channel_mix(p["rwkv"], h2, cfg)
+            x = x + y
+            return x, {"wkv": wkv, "tshift": tshift.astype(jnp.float32),
+                       "cshift": cshift.astype(jnp.float32)}
+        fn = jax.checkpoint(body) if remat else body
+        x, st = jax.lax.scan(fn, x, params["blocks"])
+        cache = {"rwkv": st, "pos": jnp.asarray(s, jnp.int32)}
+
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period or cfg.n_layers
+        n_groups = cfg.n_layers // period
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, period, *a.shape[1:]),
+            params["blocks"])
+        states, attn_kvs = [], []
+        for g in range(n_groups):
+            sp = params["shared_attn"]
+            h = C.rms_norm(x, sp["ln1"], cfg.norm_eps)
+            y, kv_g = A.prefill_attend(sp["attn"],
+                                       A.init_cache(cfg, b, max_len), h, cfg)
+            attn_kvs.append(kv_g)
+            x = x + y
+            h = C.rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + C.mlp(sp["mlp"], h, cfg)
+
+            def body(x, p):
+                h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+                y, st = SS.mamba_forward(p["mamba"], h, cfg,
+                                         return_state=True)
+                return x + y, st
+            fn = jax.checkpoint(body) if remat else body
+            sub = jax.tree_util.tree_map(lambda a: a[g], grouped)
+            x, st = jax.lax.scan(fn, x, sub)
+            states.append(st)
+        mamba_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *states)
+        attn_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *attn_kvs)
+        cache = {"mamba": mamba_cache, "attn_kv": attn_cache,
+                 "pos": jnp.asarray(s, jnp.int32)}
+    else:
+        raise ValueError(cfg.family)
+
+    x = C.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = C.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, stacked per-layer caches)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    n = cfg.n_layers
+
+    def per_layer(fn):
+        one = fn()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": per_layer(lambda: A.init_cache(cfg, batch, max_len)),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        return {"rwkv": per_layer(lambda: R.init_rwkv_cache(cfg, batch)),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        # the shared attention block runs once per group; each invocation
+        # has distinct activations and therefore its own KV cache
+        n_groups = cfg.n_layers // (cfg.hybrid_period or cfg.n_layers)
+        one_kv = A.init_cache(cfg, batch, max_len)
+        return {"mamba": per_layer(lambda: SS.init_mamba_cache(cfg, batch)),
+                "attn_kv": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape),
+                    one_kv),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "encdec":
+        # self-attn cache over decoder positions + precomputed cross K/V
+        def xkv():
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            return {"k": jnp.zeros((batch, max_len, kv, hd), C.cdtype(cfg)),
+                    "v": jnp.zeros((batch, max_len, kv, hd), C.cdtype(cfg))}
+        return {
+            "kv": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape),
+                A.init_cache(cfg, batch, cfg.max_target_len)),
+            "cross": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape),
+                xkv()),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def _block_decode(p: Params, cache: Params, x: jax.Array, pos,
+                  cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, kv = A.decode_attend(p["attn"], cache, h, pos, cfg)
+        x = x + y
+        h = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = M.moe_ffn(p["moe"], h, cfg, full_capacity=True)
+            return x + y, kv
+        return x + C.mlp(p["mlp"], h, cfg), kv
+    if cfg.family == "ssm":
+        h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+        r = p["rwkv"]
+        xx = cache["tshift"].astype(x.dtype)[:, None]
+        rr, k, v, g, log_w = R._time_mix_inputs(r, h, xx, cfg)
+        b = x.shape[0]
+        nh = R.n_heads(cfg)
+        rh = rr.astype(jnp.float32).reshape(b, 1, nh, R.HEAD_DIM)
+        kh = k.astype(jnp.float32).reshape(b, 1, nh, R.HEAD_DIM)
+        vh = v.astype(jnp.float32).reshape(b, 1, nh, R.HEAD_DIM)
+        wh = log_w.reshape(b, 1, nh, R.HEAD_DIM)
+        y, wkv = R._wkv_scan(rh, kh, vh, wh,
+                             r["bonus_u"].astype(jnp.float32), cache["wkv"])
+        y = y.reshape(b, 1, cfg.d_model).astype(x.dtype)
+        y = C.rms_norm(y, r["ln_x"], cfg.norm_eps) * g
+        x = x + y @ r["wo"].astype(x.dtype)
+        new_tshift = h[:, -1].astype(jnp.float32)
+        h2 = C.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = R.channel_mix(r, h2, cfg,
+                             prev=cache["cshift"].astype(x.dtype))
+        x = x + y
+        return x, {"wkv": wkv, "tshift": new_tshift,
+                   "cshift": h2[:, -1].astype(jnp.float32)}
+    if cfg.family == "hybrid":
+        h = C.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new = SS.mamba_decode_step(p["mamba"], cache, h, cfg)
+        return x + y, new
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """One decode step for all families.  tokens: (B, 1) int32."""
+    pos = cache["pos"]
+    x = C.embed(params["embed"], tokens, cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, inp):
+            p, c = inp
+            y, kv = _block_decode(p, c, x, pos, cfg)
+            return C.shard_batch(y), kv
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+        new_cache = {"kv": new_kv, "pos": pos + 1}
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, c = inp
+            return _block_decode(p, c, x, pos, cfg)
+        x, new_r = jax.lax.scan(body, x, (params["blocks"], cache["rwkv"]))
+        new_cache = {"rwkv": new_r, "pos": pos + 1}
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period or cfg.n_layers
+        n_groups = cfg.n_layers // period
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, period, *a.shape[1:]),
+            params["blocks"])
+        gcache = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, period, *a.shape[1:]),
+            cache["mamba"])
+        new_groups, new_attn_kvs = [], []
+        for g in range(n_groups):
+            attn_kv_g = jax.tree_util.tree_map(lambda a: a[g],
+                                               cache["attn_kv"])
+            h = C.rms_norm(x, params["shared_attn"]["ln1"], cfg.norm_eps)
+            y, attn_kv_g = A.decode_attend(params["shared_attn"]["attn"],
+                                           attn_kv_g, h, pos, cfg)
+            new_attn_kvs.append(attn_kv_g)
+            x = x + y
+            h = C.rms_norm(x, params["shared_attn"]["ln2"], cfg.norm_eps)
+            x = x + C.mlp(params["shared_attn"]["mlp"], h, cfg)
+            sub = jax.tree_util.tree_map(lambda a: a[g], grouped)
+            subc = jax.tree_util.tree_map(lambda a: a[g], gcache)
+
+            def body(x, inp):
+                p, c = inp
+                return _block_decode(p, c, x, pos, cfg)
+            x, newc = jax.lax.scan(body, x, (sub, subc))
+            new_groups.append(newc)
+        new_mamba = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_groups)
+        new_attn = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *new_attn_kvs)
+        new_cache = {"mamba": new_mamba, "attn_kv": new_attn, "pos": pos + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    x = C.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return C.unembed(params["embed"], x, cfg)[:, 0], new_cache
+
+
+def whisper_decode_step(params: Params, cache: Params, tokens: jax.Array,
+                        cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """Whisper decoder step against precomputed cross K/V."""
+    pos = cache["pos"]
+    x = C.embed(params["embed"], tokens, cfg)
+    posemb = C.sinusoid_positions(cfg.max_target_len, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        posemb, jnp.minimum(pos, cfg.max_target_len - 1), 1, 0
+    ).astype(x.dtype)[None]
+
+    def body(x, inp):
+        p, kv, cross = inp
+        h = C.layer_norm(x, p["ln1"], p["ln1b"], cfg.norm_eps)
+        y, kv_new = A.decode_attend(p["attn"], kv, h, pos, cfg)
+        x = x + y
+        h = C.layer_norm(x, p["ln_x"], p["ln_xb"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"].astype(x.dtype))
+        mask = jnp.ones((1, cross["k"].shape[1]), bool)
+        out = A._scores_softmax_value(
+            q, cross["k"].astype(x.dtype), cross["v"].astype(x.dtype),
+            mask, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", out,
+                           p["xattn"]["wo"].astype(x.dtype))
+        h = C.layer_norm(x, p["ln2"], p["ln2b"], cfg.norm_eps)
+        x = x + C.mlp(p["mlp"], h, cfg)
+        return x, kv_new
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["kv"], cache["cross"]))
+    x = C.layer_norm(x, params["final_norm"], params["final_norm_b"],
+                     cfg.norm_eps)
+    new_cache = dict(cache)
+    new_cache["kv"] = new_kv
+    new_cache["pos"] = pos + 1
+    return C.unembed(params["embed"], x, cfg)[:, 0], new_cache
+
+
+def whisper_prefill(params: Params, enc_embeds: jax.Array,
+                    cfg: ModelConfig, batch: int) -> Params:
+    """Encode + precompute cross-attention K/V for decoding."""
+    enc = whisper_encode(params, enc_embeds, cfg)
+    cache = init_decode_cache(cfg, batch, cfg.max_target_len)
+
+    def per_layer(p):
+        dt = C.cdtype(cfg)
+        k = jnp.einsum("bsd,dhk->bshk", enc.astype(dt),
+                       p["xattn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc.astype(dt),
+                       p["xattn"]["wv"].astype(dt))
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(per_layer)(params["dec_blocks"])
+    cache["cross"] = cross
+    return cache

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN with top-k routing (mixtral 8e/top-2,
+dbrx 16e/top-4).
+
+Dispatch uses the capacity-based GShard/Switch formulation with fixed
+shapes (jit-friendly): each expert processes at most
+``capacity = ceil(tokens * top_k / n_experts * capacity_factor)`` tokens;
+overflow tokens fall through the residual connection.  Compute is
+proportional to *active* experts (top_k), not n_experts — this is what
+makes MODEL_FLOPS = 6·N_active·D the right roofline numerator for MoE.
+
+Two parallelism modes (see distributed/sharding.py):
+  * TP (default): expert weights sharded on d_ff over "model".
+  * EP (dbrx hillclimb): expert axis sharded over "model"; the dispatch
+    einsum then lowers to an all_to_all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = C.pdtype(cfg)
+    ks = C.split_keys(key, ["router", "gate", "up", "down"])
+    return {
+        "router": C.dense_init(ks["router"], (d, e), dt),
+        "gate": C.dense_init(ks["gate"], (e, d, f), dt, fan_in=d),
+        "up": C.dense_init(ks["up"], (e, d, f), dt, fan_in=d),
+        "down": C.dense_init(ks["down"], (e, f, d), dt, fan_in=f),
+    }
+
+
+# set by the launcher when RunConfig.expert_parallel is on (dbrx: 16
+# experts over the 16-way model axis; the dispatch becomes an all-to-all)
+EXPERT_PARALLEL = False
+
+
+def _shard_experts(expert_buf: jax.Array) -> jax.Array:
+    """EP: constrain (E, cap, D) buffers to experts-over-'model'."""
+    if not EXPERT_PARALLEL:
+        return expert_buf
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return expert_buf
+    if am is None or not am.axis_names:
+        return expert_buf
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    if "model" not in sizes or expert_buf.shape[0] % sizes["model"] != 0:
+        return expert_buf
+    from jax.sharding import PartitionSpec as _P
+    return jax.lax.with_sharding_constraint(
+        expert_buf, _P("model", None, None))
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(cap, cfg.top_k)
+
+
+SEQ_CHUNK = 2048
+
+
+def moe_ffn(params: Params, x: jax.Array, cfg: ModelConfig,
+            full_capacity: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    aux_loss is the standard load-balancing loss (mean fraction * mean
+    router prob per expert, scaled by n_experts).  ``full_capacity=True``
+    sizes the expert buffers to the worst case (capacity = T) so no token
+    is ever dropped — used by the decode path, where a dropped token would
+    silently change served logits.
+
+    Long sequences (32k prefill) are processed in SEQ_CHUNK slices via
+    ``lax.scan`` so the (E, capacity, D) dispatch buffers stay bounded —
+    capacity is per-chunk, which only tightens the same expectation.
+    """
+    b, s, d = x.shape
+    if s > SEQ_CHUNK and not full_capacity and s % SEQ_CHUNK == 0:
+        nc = s // SEQ_CHUNK
+        xs = jnp.moveaxis(x.reshape(b, nc, SEQ_CHUNK, d), 1, 0)
+
+        def body(aux, xc):
+            yc, a = _moe_ffn_flat(params, xc, cfg, False)
+            return aux + a / nc, yc
+
+        fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        aux, ys = jax.lax.scan(fn, jnp.zeros((), jnp.float32), xs)
+        return jnp.moveaxis(ys, 0, 1).reshape(b, s, d), aux
+    return _moe_ffn_flat(params, x, cfg, full_capacity)
+
+
+def _moe_ffn_flat(params: Params, x: jax.Array, cfg: ModelConfig,
+                  full_capacity: bool) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = t if full_capacity else _capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # (T, K, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)             # (T, K)
+    keep = pos < cap
+
+    # dispatch/combine tensors (T, K) indices -> (E, cap) buffers
+    disp_idx = expert_idx * cap + jnp.where(keep, pos, 0)      # (T, K)
+    disp_idx = jnp.where(keep, disp_idx, e * cap)              # overflow slot
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buf = buf.at[disp_idx.reshape(-1)].add(
+        jnp.repeat(xt, k, axis=0).reshape(t, k, d).reshape(t * k, d))
+    expert_in = buf[:e * cap].reshape(e, cap, d)
+    expert_in = _shard_experts(expert_in)
+
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", expert_in, params["gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", expert_in, params["up"].astype(dt))
+    expert_out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                            params["down"].astype(dt))
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * cap, d), jnp.zeros((1, d), dt)], axis=0)
+    gathered = flat_out[disp_idx.reshape(-1)].reshape(t, k, d)
+    y = jnp.einsum("tkd,tk->td", gathered,
+                   (gate_vals * keep).astype(dt)).reshape(b, s, d)
+
+    # load-balancing aux loss
+    frac = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32),
+                    axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_prob)
+    return y, aux

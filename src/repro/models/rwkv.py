@@ -1,0 +1,152 @@
+"""RWKV6 ("Finch") — attention-free RNN with data-dependent decay.
+
+Time-mix:  per head, state S in R^{hd x hd},
+
+    wkv_t = diag(u) k_t v_t^T + S_{t-1}
+    y_t   = r_t . wkv_t
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+with the v6 hallmark: the decay w_t = exp(-exp(ww_t)) is *data-dependent*,
+produced by a low-rank (LoRA) head from the token-shifted input.  Receptance
+/key/value/gate use static token-shift mixing (v5-style lerp); the decay
+LoRA is the architecturally significant part and is kept faithful.
+
+The recurrence is evaluated with ``lax.scan`` over time for training
+(numerically exact for any decay magnitude) and as a single state update
+for decode — the 500k cell runs with O(1) state.  A chunk-parallel
+formulation (FLA-style) factorizes the decay products and is the natural
+Pallas target on real hardware; see DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+
+Params = Dict[str, Any]
+
+DECAY_LORA = 64
+HEAD_DIM = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    nh = n_heads(cfg)
+    dt = C.pdtype(cfg)
+    ks = C.split_keys(key, ["r", "k", "v", "g", "o", "w1", "w2",
+                            "ck", "cv", "cr"])
+    p = {
+        # time-mix
+        "mix": 0.5 * jnp.ones((5, d), dt),   # r,k,v,g,w lerp coefficients
+        "wr": C.dense_init(ks["r"], (d, d), dt),
+        "wk": C.dense_init(ks["k"], (d, d), dt),
+        "wv": C.dense_init(ks["v"], (d, d), dt),
+        "wg": C.dense_init(ks["g"], (d, d), dt),
+        "wo": C.dense_init(ks["o"], (d, d), dt),
+        "decay_w1": C.dense_init(ks["w1"], (d, DECAY_LORA), dt),
+        "decay_w2": C.dense_init(ks["w2"], (DECAY_LORA, d), dt,
+                                 fan_in=DECAY_LORA),
+        "decay_bias": -6.0 * jnp.ones((d,), dt),  # slow default decay
+        "bonus_u": jnp.zeros((nh, HEAD_DIM), dt),
+        "ln_x": jnp.ones((d,), dt),
+        # channel-mix
+        "cmix": 0.5 * jnp.ones((2, d), dt),
+        "ck": C.dense_init(ks["ck"], (d, cfg.d_ff), dt),
+        "cv": C.dense_init(ks["cv"], (cfg.d_ff, d), dt, fan_in=cfg.d_ff),
+        "cr": C.dense_init(ks["cr"], (d, d), dt),
+    }
+    return p
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _time_mix_inputs(p: Params, x: jax.Array, xx: jax.Array,
+                     cfg: ModelConfig):
+    dt = x.dtype
+    mix = p["mix"].astype(dt)
+    xr, xk, xv, xg, xw = (x * mix[i] + xx * (1 - mix[i]) for i in range(5))
+    r = xr @ p["wr"].astype(dt)
+    k = xk @ p["wk"].astype(dt)
+    v = xv @ p["wv"].astype(dt)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    # data-dependent decay (v6 LoRA)
+    ww = p["decay_bias"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_w1"].astype(dt)).astype(jnp.float32)
+        @ p["decay_w2"].astype(jnp.float32))
+    log_w = -jnp.exp(ww)                 # log decay, <= 0
+    return r, k, v, g, log_w
+
+
+def _wkv_scan(r, k, v, log_w, u, state):
+    """Recurrent wkv over time.  r/k/v: (B,S,nh,hd) f32; state (B,nh,hd,hd).
+
+    Returns (y (B,S,nh,hd), final state).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp           # (B,nh,hd) / decay (B,nh,hd)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        wkv = s + u[None, :, :, None] * kv
+        yt = jnp.einsum("bhi,bhij->bhj", rt, wkv)
+        s = jnp.exp(wt)[..., None] * s + kv
+        return s, yt
+
+    # recompute the per-step outer products in backward: without this the
+    # scan saves a (B, nh, hd, hd) residual per TOKEN
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def time_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+             state=None, prev=None):
+    """x: (B,S,D). state: optional (B,nh,hd,hd) carried wkv state."""
+    b, s, d = x.shape
+    nh = n_heads(cfg)
+    xx = _shift(x, prev)
+    r, k, v, g, log_w = _time_mix_inputs(p, x, xx, cfg)
+    rh = r.astype(jnp.float32).reshape(b, s, nh, HEAD_DIM)
+    kh = k.astype(jnp.float32).reshape(b, s, nh, HEAD_DIM)
+    vh = v.astype(jnp.float32).reshape(b, s, nh, HEAD_DIM)
+    wh = log_w.reshape(b, s, nh, HEAD_DIM)
+    if state is None:
+        state = jnp.zeros((b, nh, HEAD_DIM, HEAD_DIM), jnp.float32)
+    u = p["bonus_u"].astype(jnp.float32)
+    y, state = _wkv_scan(rh, kh, vh, wh, u, state)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = C.rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    return y @ p["wo"].astype(x.dtype), state, x[:, -1]
+
+
+def channel_mix(p: Params, x: jax.Array, cfg: ModelConfig, prev=None):
+    dt = x.dtype
+    xx = _shift(x, prev)
+    mix = p["cmix"].astype(dt)
+    xk = x * mix[0] + xx * (1 - mix[0])
+    xr = x * mix[1] + xx * (1 - mix[1])
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(dt)))
+    r = jax.nn.sigmoid(xr @ p["cr"].astype(dt))
+    return r * (k @ p["cv"].astype(dt)), x[:, -1]
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> Params:
+    nh = n_heads(cfg)
+    return {
+        "wkv": jnp.zeros((batch, nh, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "tshift": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "cshift": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) block — chunked-parallel training, O(1)-state decode.
+
+Used by zamba2's backbone.  The selective state-space recurrence per head
+
+    S_t = a_t S_{t-1} + (dt_t x_t) (x) B_t,      y_t = S_t C_t + D x_t,
+    a_t = exp(-dt_t * exp(A_log))
+
+is evaluated chunk-parallel for training (intra-chunk quadratic form +
+inter-chunk state scan, the SSD algorithm) and as a single state update for
+decode — which is why the 500k-token long-context cell is O(1) per token
+for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+
+Params = Dict[str, Any]
+
+CHUNK = 64
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, cfg.ssm_state, n_heads, cfg.ssm_head_dim
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din, ds, nh, hd = dims(cfg)
+    dt = C.pdtype(cfg)
+    ks = C.split_keys(key, ["in_proj", "conv", "out_proj", "dt"])
+    conv_dim = din + 2 * ds
+    return {
+        "in_proj": C.dense_init(ks["in_proj"],
+                                (d, 2 * din + 2 * ds + nh), dt),
+        "conv_w": C.dense_init(ks["conv"], (cfg.ssm_conv, conv_dim), dt,
+                               fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((nh,), dt),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), dt),
+        "dt_bias": C.dense_init(ks["dt"], (nh,), dt, fan_in=1),
+        "norm": jnp.ones((din,), dt),
+        "out_proj": C.dense_init(ks["out_proj"], (din, d), dt, fan_in=din),
+    }
+
+
+def _split_proj(params, x, cfg):
+    din, ds, nh, hd = dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :din]
+    xc = zxbcdt[..., din:2 * din]
+    bc = zxbcdt[..., 2 * din:2 * din + 2 * ds]
+    dt_raw = zxbcdt[..., 2 * din + 2 * ds:]
+    return z, xc, bc, dt_raw
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  u: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = None
+    for i in range(k):
+        term = pad[:, i:i + u.shape[1]] * w[i]
+        out = term if out is None else out + term
+    return out + b
+
+
+def mamba_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                  return_state: bool = False):
+    """Training/prefill forward.  x: (B, S, D) -> (B, S, D).
+
+    With ``return_state=True`` also returns the decode cache (final SSM
+    state + conv history) for prefill->decode handoff."""
+    b, s, d = x.shape
+    din, ds, nh, hd = dims(cfg)
+    z, xc, bc, dt_raw = _split_proj(params, x, cfg)
+    conv_in = jnp.concatenate([xc, bc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"].astype(
+        x.dtype), params["conv_b"].astype(x.dtype)))
+    xc = conv_out[..., :din]
+    bmat = conv_out[..., din:din + ds]
+    cmat = conv_out[..., din + ds:]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))
+    log_a = dt_v * a_neg                                  # (B,S,nh), <= 0
+    xh = xc.reshape(b, s, nh, hd)
+    u = xh.astype(jnp.float32) * dt_v[..., None]          # dt-scaled input
+
+    # ---- chunked SSD scan ----
+    l = min(CHUNK, s)
+    assert s % l == 0, f"seq {s} not divisible by chunk {l}"
+    nc = s // l
+    la = log_a.reshape(b, nc, l, nh)
+    cum = jnp.cumsum(la, axis=2)                          # (B,nc,L,nh)
+    uc = u.reshape(b, nc, l, nh, hd)
+    bm = bmat.astype(jnp.float32).reshape(b, nc, l, ds)
+    cm = cmat.astype(jnp.float32).reshape(b, nc, l, ds)
+
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    def scan_fn(state, inp):
+        cum_c, uc_c, bm_c, cm_c = inp   # per-chunk slices
+        # intra: y_t += sum_{s<=t} exp(cum_t - cum_s) (B_s . C_t) u_s
+        cb = jnp.einsum("btk,blk->btl", cm_c, bm_c)        # (B,L,L)
+        decay = jnp.exp(cum_c[:, :, None, :] - cum_c[:, None, :, :])
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        y = jnp.einsum("btl,btlh,blhd->bthd", cb, decay, uc_c)
+        # inter: contribution of the carried state
+        y = y + jnp.einsum("blh,bhdk,blk->blhd",
+                           jnp.exp(cum_c), state, cm_c)
+        kdecay = jnp.exp(cum_c[:, -1:, :] - cum_c)         # (B,L,nh)
+        cstate = jnp.einsum("blh,blhd,blk->bhdk", kdecay, uc_c, bm_c)
+        new = jnp.exp(cum_c[:, -1])[..., None, None] * state + cstate
+        return new, y
+
+    # one chunk of (L, L, nh) decay lives at a time; recomputed in bwd
+    scan_fn = jax.checkpoint(
+        scan_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    init = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    final_state, y_chunks = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(cum, 1, 0), jnp.moveaxis(uc, 1, 0),
+         jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0)))
+    y = jnp.moveaxis(y_chunks, 0, 1)                       # (B,nc,L,nh,hd)
+    y = y.reshape(b, s, nh, hd)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        cache = {"ssm": final_state,
+                 "conv": conv_in[:, -(cfg.ssm_conv - 1):]
+                 .astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+    din, ds, nh, hd = dims(cfg)
+    conv_dim = din + 2 * ds
+    return {
+        "ssm": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: Params, cache: Params, x: jax.Array,
+                      cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """x: (B, 1, D) -> (y, new_cache); O(1) per token."""
+    b = x.shape[0]
+    din, ds, nh, hd = dims(cfg)
+    z, xc, bc, dt_raw = _split_proj(params, x, cfg)
+    conv_in = jnp.concatenate([xc, bc], axis=-1)           # (B,1,conv_dim)
+    hist = jnp.concatenate(
+        [cache["conv"].astype(x.dtype), conv_in], axis=1)  # (B,K,conv)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(x.dtype))
+    xc1 = conv_out[:, :din]
+    bm = conv_out[:, din:din + ds].astype(jnp.float32)
+    cm = conv_out[:, din + ds:].astype(jnp.float32)
+
+    dt_v = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(dt_v * -jnp.exp(params["A_log"].astype(jnp.float32)))
+    xh = xc1.reshape(b, nh, hd).astype(jnp.float32)
+    u = xh * dt_v[..., None]
+
+    s_new = a[..., None, None] * cache["ssm"] \
+        + jnp.einsum("bhd,bk->bhdk", u, bm)
+    y = jnp.einsum("bhdk,bk->bhd", s_new, cm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    y = y @ params["out_proj"].astype(x.dtype)
+    return y, {"ssm": s_new, "conv": hist[:, 1:].astype(jnp.float32)}

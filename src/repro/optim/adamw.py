@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay + cosine schedule + grad clipping.
+
+Hand-rolled (no optax dependency).  Optimizer state mirrors the parameter
+pytree, so ZeRO-3-style sharding falls out of using the same
+PartitionSpecs as the parameters (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def cosine_lr(step, run: RunConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(run.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - run.warmup_steps)
+                    / jnp.maximum(run.total_steps - run.warmup_steps, 1),
+                    0.0, 1.0)
+    return run.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply(grads, state: AdamWState, params, run: RunConfig,
+          clip_norm: float = 1.0) -> Tuple[Any, AdamWState, Dict[str, Any]]:
+    count = state.count + 1
+    lr = cosine_lr(count, run)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2, eps = run.beta1, run.beta2, run.eps
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+    mu_hat_scale = 1.0 / (1 - b1 ** count.astype(jnp.float32))
+    nu_hat_scale = 1.0 / (1 - b2 ** count.astype(jnp.float32))
+
+    def upd(p, m, v):
+        step_ = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + eps)
+        step_ = step_ + run.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(count, mu, nu), metrics

@@ -1,0 +1,73 @@
+"""Training loop with checkpoint/restart, async saves, and failure hooks.
+
+The loop is deliberately dumb: all intelligence lives in pure step
+functions (runtime/steps.py) and the substrate (checkpointer, pipeline).
+Restart-safety contract: state(t+1) = f(state(t), batch(t)) with batch(t)
+a pure function of (seed, t) — so crash + restore(step=k) replays exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.data.pipeline import Pipeline
+from repro.runtime import steps as ST
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_loss: float
+    losses: list
+    steps_run: int
+    restored_from: Optional[int]
+
+
+def train(cfg: ModelConfig, run: RunConfig, pipeline: Pipeline,
+          shape: ShapeConfig, num_steps: int,
+          log_every: int = 10,
+          on_step: Optional[Callable[[int, Dict], None]] = None,
+          resume: bool = True) -> TrainResult:
+    ck = Checkpointer(run.checkpoint_dir, keep=run.keep_checkpoints)
+    rng = jax.random.PRNGKey(run.seed)
+    state = ST.init_train_state(rng, cfg, run)
+
+    restored_from = None
+    if resume and ck.latest_step() is not None:
+        state, restored_from = ck.restore(state)
+
+    step_fn = jax.jit(functools.partial(ST.train_step, cfg=cfg, run=run),
+                      donate_argnums=0)
+
+    losses = []
+    start = int(state.step)
+    t0 = time.time()
+    for step in range(start, num_steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in pipeline.batch_at(step, shape).items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if on_step:
+            on_step(step, metrics)
+        if log_every and (step % log_every == 0 or step == num_steps - 1):
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"({dt:.1f}s)", flush=True)
+        if run.checkpoint_every and step > 0 \
+                and step % run.checkpoint_every == 0:
+            ck.save_async(step, state)
+    ck.wait()
+    if num_steps > start:
+        ck.save(num_steps, state)
+    return TrainResult(final_loss=losses[-1] if losses else float("nan"),
+                       losses=losses, steps_run=num_steps - start,
+                       restored_from=restored_from)

@@ -1,0 +1,84 @@
+"""Checkpointing: atomicity, GC, async, restore, structure checks."""
+import json
+import shutil
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 4)),
+                                    jnp.float32),
+                   "b": jnp.asarray(rng.standard_normal(4), jnp.bfloat16)},
+        "step": jnp.asarray(17, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree()
+    ck.save(100, tree)
+    template = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, step = ck.restore(template)
+    assert step == 100
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree())
+    # simulate a crash mid-save at a later step
+    broken = tmp_path / "step_000000009"
+    broken.mkdir()
+    (broken / "MANIFEST.json").write_text("{}")
+    assert ck.latest_step() == 5
+
+
+def test_gc_keeps_newest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert names == ["step_000000003", "step_000000004"]
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(7, _tree())
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    with pytest.raises(ValueError):
+        ck.restore({"only_one_leaf": jnp.zeros(3)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((9, 9))
+    with pytest.raises(ValueError):
+        ck.restore(bad)
+
+
+def test_restore_latest_of_many(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (10, 30, 20):
+        ck.save(s, _tree(s))
+    template = jax.tree_util.tree_map(jnp.zeros_like, _tree())
+    _, step = ck.restore(template)
+    assert step == 30

@@ -1,0 +1,121 @@
+"""The paper's central claims at the scheme level.
+
+* all six schemes compute identical coefficients (Section 4: "they all
+  compute the same values");
+* the step counts halve for the non-separable variants (Table 1);
+* the Section 5 optimization reproduces the paper's operation counts
+  (Table 1, OpenCL column) exactly for 13 of its 14 cells.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import optimize as O
+from repro.core import poly as P
+from repro.core import schemes as S
+from repro.core.wavelets import WAVELETS
+
+WNAMES = sorted(WAVELETS)
+
+# Paper Table 1: (steps, OpenCL ops) for the optimized schemes.
+PAPER_TABLE1 = {
+    ("cdf53", "sep-conv"): (2, 20),
+    ("cdf53", "sep-lifting"): (4, 16),
+    ("cdf53", "ns-conv"): (1, 23),
+    ("cdf53", "ns-lifting"): (2, 18),
+    ("cdf97", "sep-conv"): (2, 56),
+    ("cdf97", "sep-lifting"): (8, 32),
+    ("cdf97", "ns-conv"): (1, 152),
+    ("cdf97", "ns-polyconv"): (2, 46),
+    ("cdf97", "ns-lifting"): (4, 36),
+    ("dd137", "sep-conv"): (2, 60),
+    ("dd137", "sep-lifting"): (4, 32),
+    ("dd137", "ns-conv"): (1, 203),
+    ("dd137", "ns-lifting"): (2, 50),
+}
+# The one knowingly-diverging cell: paper reports 20 for CDF 9/7 separable
+# polyconvolution (register reuse across steps); our convention gives 40.
+PAPER_DIVERGENT = {("cdf97", "sep-polyconv"): (4, 20, 40)}
+
+
+@pytest.mark.parametrize("wname", WNAMES)
+def test_total_matrices_identical(wname):
+    ref = S.build_scheme(wname, "sep-lifting").total_matrix()
+    for sc in S.SCHEMES:
+        got = S.build_scheme(wname, sc).total_matrix()
+        assert P.mat_max_diff(got, ref) < 1e-9, sc
+
+
+@pytest.mark.parametrize("wname", WNAMES)
+def test_optimized_matrices_identical(wname):
+    ref = S.build_scheme(wname, "sep-lifting").total_matrix()
+    for sc in S.SCHEMES:
+        got = O.build_optimized(wname, sc).total_matrix()
+        assert P.mat_max_diff(got, ref) < 1e-9, sc
+
+
+@pytest.mark.parametrize("wname", WNAMES)
+def test_numeric_equivalence_all_schemes(wname):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 96)), dtype=jnp.float32)
+    ref = S.forward(x, wname, "sep-lifting")
+    for sc in S.SCHEMES:
+        y = S.forward(x, wname, sc)
+        yo = O.forward_optimized(x, wname, sc)
+        for a, b, c in zip(ref, y, yo):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=2e-4, atol=2e-5)
+
+
+def test_step_halving():
+    """The paper's headline: non-separable fusion halves step counts."""
+    for wname in WNAMES:
+        k = WAVELETS[wname].K
+        assert S.build_scheme(wname, "sep-conv").num_steps == 2
+        assert S.build_scheme(wname, "ns-conv").num_steps == 1
+        assert S.build_scheme(wname, "sep-lifting").num_steps == 4 * k
+        assert S.build_scheme(wname, "ns-lifting").num_steps == 2 * k
+        assert S.build_scheme(wname, "sep-polyconv").num_steps == 2 * k
+        assert S.build_scheme(wname, "ns-polyconv").num_steps == k
+
+
+@pytest.mark.parametrize("key", sorted(PAPER_TABLE1))
+def test_table1_opencl_ops_exact(key):
+    wname, sc = key
+    steps, paper_ops = PAPER_TABLE1[key]
+    t = O.table1_ops(wname, sc)
+    assert t["steps"] == steps
+    assert t["ops_adapted"] == paper_ops, t
+
+
+def test_table1_divergent_cell_documented():
+    for (wname, sc), (steps, paper, ours) in PAPER_DIVERGENT.items():
+        t = O.table1_ops(wname, sc)
+        assert t["steps"] == steps
+        assert t["ops_adapted"] == ours  # our counting convention
+
+
+def test_raw_ns_conv_count_cdf97():
+    """Raw (unoptimized) ns-conv for CDF 9/7 = 81+63+63+49 = 256 MACs,
+    the filter sizes of the paper's Figure 3."""
+    t = O.table1_ops("cdf97", "ns-conv")
+    assert t["ops_raw"] == 256
+
+
+@pytest.mark.parametrize("wname", WNAMES)
+@pytest.mark.parametrize("sc", S.SCHEMES)
+def test_inverse_scheme_is_exact_inverse(wname, sc):
+    fwd = S.build_scheme(wname, sc).total_matrix()
+    inv = S.build_inverse_scheme(wname, sc).total_matrix()
+    assert P.mat_max_diff(P.matmul(inv, fwd), P.identity()) < 1e-9
+
+
+def test_polyconv_equals_conv_for_single_pair():
+    """Paper: polyconvolution 'makes sense only when K > 1'."""
+    for wname in ("cdf53", "dd137"):
+        a = S.build_scheme(wname, "ns-conv")
+        b = S.build_scheme(wname, "ns-polyconv")
+        assert a.num_steps == b.num_steps == 1
+        assert P.mat_max_diff(a.total_matrix(), b.total_matrix()) < 1e-9

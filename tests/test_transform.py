@@ -1,0 +1,72 @@
+"""Multi-level transform API + hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transform as T
+from repro.core.schemes import SCHEMES
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h_blocks=st.integers(1, 6),
+    w_blocks=st.integers(1, 6),
+    levels=st.integers(1, 3),
+    wavelet=st.sampled_from(["cdf53", "cdf97", "dd137"]),
+    scheme=st.sampled_from(list(SCHEMES)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_perfect_reconstruction_property(h_blocks, w_blocks, levels,
+                                         wavelet, scheme, seed):
+    """For any shape/level/wavelet/scheme: idwt2(dwt2(x)) == x."""
+    block = 1 << levels
+    h, w = h_blocks * block * 2, w_blocks * block * 2
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((h, w)), dtype=jnp.float32)
+    pyr = T.dwt2(x, wavelet=wavelet, levels=levels, scheme=scheme)
+    xr = T.idwt2(pyr, wavelet=wavelet, scheme=scheme)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(levels=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_flatten_unflatten_roundtrip(levels, seed):
+    rng = np.random.default_rng(seed)
+    n = 16 << levels
+    x = jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32)
+    pyr = T.dwt2(x, levels=levels)
+    flat = T.flatten_pyramid(pyr)
+    assert flat.shape == x.shape
+    pyr2 = T.unflatten_pyramid(flat, levels)
+    for a, b in zip([pyr.ll] + [d for t in pyr.details for d in t],
+                    [pyr2.ll] + [d for t in pyr2.details for d in t]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_energy_compaction():
+    """Smooth images compact into LL: detail energy << total energy."""
+    yy, xx = np.mgrid[0:64, 0:64] / 64.0
+    img = jnp.asarray(np.sin(2 * np.pi * yy) + np.cos(2 * np.pi * xx),
+                      dtype=jnp.float32)
+    pyr = T.dwt2(img, wavelet="cdf97", levels=2)
+    total = float(jnp.sum(img ** 2))
+    detail = sum(float(jnp.sum(d ** 2)) for t in pyr.details for d in t)
+    assert detail < 0.05 * total
+
+
+def test_batched_transform():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((3, 2, 32, 32)), dtype=jnp.float32)
+    pyr = T.dwt2(x, levels=2)
+    assert pyr.ll.shape == (3, 2, 8, 8)
+    xr = T.idwt2(pyr)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_indivisible_shape_raises():
+    x = jnp.zeros((30, 30))
+    with pytest.raises(ValueError):
+        T.dwt2(x, levels=3)

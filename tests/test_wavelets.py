@@ -1,0 +1,58 @@
+"""Wavelet definitions: lifting factorizations vs published filter banks."""
+import numpy as np
+import pytest
+
+from repro.core.wavelets import WAVELETS, get_wavelet
+
+# Published analysis filter taps (DC(low)=1 convention).
+CDF53_LOW = [-0.125, 0.25, 0.75, 0.25, -0.125]
+CDF53_HIGH = [-0.5, 1.0, -0.5]
+CDF97_LOW = [0.026748757410810, -0.016864118442875, -0.078223266528990,
+             0.266864118442875, 0.602949018236360, 0.266864118442875,
+             -0.078223266528990, -0.016864118442875, 0.026748757410810]
+CDF97_HIGH = [0.091271763114250, -0.057543526228500, -0.591271763114250,
+              1.115087052457000, -0.591271763114250, -0.057543526228500,
+              0.091271763114250]
+
+
+def _dense(taps):
+    lo, hi = min(taps), max(taps)
+    return [taps.get(k, 0.0) for k in range(lo, hi + 1)]
+
+
+def test_cdf53_matches_published():
+    low, high = get_wavelet("cdf53").analysis_filters()
+    np.testing.assert_allclose(_dense(low), CDF53_LOW, atol=1e-12)
+    np.testing.assert_allclose(_dense(high), CDF53_HIGH, atol=1e-12)
+
+
+def test_cdf97_matches_published():
+    low, high = get_wavelet("cdf97").analysis_filters()
+    np.testing.assert_allclose(_dense(low), CDF97_LOW, atol=1e-9)
+    np.testing.assert_allclose(_dense(high), CDF97_HIGH, atol=1e-9)
+
+
+def test_dd137_spans():
+    """DD 13/7: analysis filters span 13 (low) and 7 (high) taps."""
+    low, high = get_wavelet("dd137").analysis_filters()
+    assert max(low) - min(low) + 1 == 13
+    assert max(high) - min(high) + 1 == 7
+
+
+@pytest.mark.parametrize("name", sorted(WAVELETS))
+def test_dc_and_nyquist_gains(name):
+    """Low-pass DC gain 1, high-pass kills DC; Nyquist gain 2 for high."""
+    low, high = get_wavelet(name).analysis_filters()
+    assert abs(sum(low.values()) - 1.0) < 1e-9
+    assert abs(sum(high.values())) < 1e-9
+    nyq = sum(c * (-1) ** k for k, c in high.items())
+    assert abs(nyq - 2.0) < 1e-9
+
+
+@pytest.mark.parametrize("name", sorted(WAVELETS))
+def test_filter_lengths_match_names(name):
+    spans = {"cdf53": (5, 3), "cdf97": (9, 7), "dd137": (13, 7)}
+    low, high = get_wavelet(name).analysis_filters()
+    lo_span = max(low) - min(low) + 1
+    hi_span = max(high) - min(high) + 1
+    assert (lo_span, hi_span) == spans[name]
