@@ -1,6 +1,8 @@
 """Benchmark: per-kernel statistics — steps, pallas_calls, MACs/quad, halo,
 ideal HBM bytes and the projected v5e step time per scheme (the kernel-
-level roofline; the numbers behind the §Perf DWT iteration log)."""
+level roofline; the numbers behind the §Perf DWT iteration log), plus the
+engine's per-plan launch summary for batched multi-level execution."""
+from repro import engine as E
 from repro.core import optimize as O
 from repro.core import schemes as S
 from repro.kernels import ops as K
@@ -8,6 +10,29 @@ from repro.kernels import ops as K
 HBM_BW = 819e9
 PEAK = 197e12
 SHAPE = (4096, 4096)
+
+
+def engine_plan_summary(shape=(8, 2048, 2048), levels: int = 3,
+                        wavelet: str = "cdf97"):
+    """Kernel launches per *execution* under each plan fuse mode.
+
+    The batch rides the leading grid dimension, so the launch count is
+    independent of batch size — the engine's point: barriers per
+    transform, not per image.
+    """
+    print(f"# engine plans: pallas_calls per execution "
+          f"(batch={shape[0]}, {shape[-2]}x{shape[-1]}, {levels} levels, "
+          f"{wavelet})")
+    print("scheme,fuse,steps_total,pallas_calls,finest_block,finest_halo")
+    cache = E.PlanCache()
+    for sc in S.SCHEMES:
+        for fuse in ("none", "scheme", "levels"):
+            plan = E.get_plan(wavelet=wavelet, scheme=sc, levels=levels,
+                              shape=shape, dtype="float32",
+                              backend="pallas", fuse=fuse, cache=cache)
+            ls = plan.level_specs[0]
+            print(f"{sc},{fuse},{plan.num_steps},{plan.pallas_calls},"
+                  f"{ls.block[0]}x{ls.block[1]},{ls.halo}")
 
 
 def main():
@@ -33,6 +58,8 @@ def main():
                       f"{st['pallas_calls']},{sch.num_ops},{sch.max_halo},"
                       f"{st['hbm_bytes']/1e6:.1f},{t_mem:.0f},{t_cmp:.0f},"
                       f"{bound}")
+    print()
+    engine_plan_summary()
 
 
 if __name__ == "__main__":

@@ -7,9 +7,12 @@ Sections:
                 the paper's OpenCL column.
   2. fig789   — paper Figures 7/8/9 (throughput vs image size per scheme):
                 CPU-measured + v5e HBM-model projections.
-  3. kernels  — per-kernel roofline (steps -> HBM round trips on TPU).
-  4. compress — DWT gradient compression (framework integration).
-  5. roofline — per-(arch x shape x mesh) summary from the dry-run
+  3. engine   — plan/executor engine: batched images/sec, plan-cached vs
+                seed-style per-call dispatch (both backends).
+  4. kernels  — per-kernel roofline (steps -> HBM round trips on TPU)
+                + per-plan launch summary.
+  5. compress — DWT gradient compression (framework integration).
+  6. roofline — per-(arch x shape x mesh) summary from the dry-run
                 artifacts (if present).
 """
 import sys
@@ -28,6 +31,11 @@ def main() -> None:
     print("=" * 72)
     from benchmarks import throughput
     throughput.main(sizes=(512, 1024) if quick else (512, 1024, 2048))
+
+    print("=" * 72)
+    throughput.engine_throughput(
+        batch_sizes=(1, 8) if quick else (1, 8, 32),
+        reps=3 if quick else 5)
 
     print("=" * 72)
     from benchmarks import kernel_bench

@@ -5,6 +5,7 @@
 import numpy as np
 import jax.numpy as jnp
 
+from repro import engine as E
 from repro.core import dwt2, idwt2
 from repro.core import schemes as S
 from repro.core import optimize as O
@@ -57,6 +58,26 @@ def main():
     print(f"  HBM round trips: sep-conv {st['pallas_calls']} vs "
           f"ns-conv {stn['pallas_calls']}  (bytes "
           f"{st['hbm_bytes']/1e6:.1f}MB -> {stn['hbm_bytes']/1e6:.1f}MB)")
+
+    print("\n-- plan/executor engine: batched, multi-level, cached --")
+    batch = jnp.stack([img] * 8)               # (8, 256, 256)
+    pyr = dwt2(batch, wavelet="cdf97", levels=3, scheme="ns-polyconv",
+               fuse="levels")                  # one traced computation
+    rec = idwt2(pyr, wavelet="cdf97", scheme="ns-polyconv", fuse="levels")
+    err = float(jnp.max(jnp.abs(rec - batch)))
+    print(f"  batched pyramid: LL{tuple(pyr.ll.shape)}  "
+          f"reconstruction_err={err:.2e}")
+    dwt2(batch, wavelet="cdf97", levels=3, scheme="ns-polyconv",
+         fuse="levels")                        # same key -> cache hit
+    stats = E.plan_cache_stats()
+    print(f"  plan cache: {stats['hits']} hits / {stats['misses']} misses "
+          f"({stats['size']} plans resident)")
+    plan = E.get_plan(wavelet="cdf97", scheme="ns-polyconv", levels=3,
+                      shape=batch.shape, dtype="float32", backend="pallas",
+                      fuse="levels")
+    print(f"  pallas plan: {plan.num_steps} steps -> "
+          f"{plan.pallas_calls} kernel launches per batch "
+          f"(any batch size)")
 
 
 if __name__ == "__main__":

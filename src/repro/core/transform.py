@@ -1,4 +1,4 @@
-"""Multi-level 2-D DWT / inverse DWT public API.
+"""Multi-level 2-D DWT / inverse DWT public API (engine-backed).
 
 This is the user-facing entry point of the core library:
 
@@ -8,97 +8,84 @@ This is the user-facing entry point of the core library:
 A pyramid is ``(LL_L, [(HL_l, LH_l, HH_l) for l in L..1])`` — the coarsest
 approximation plus per-level detail triples, finest last.
 
-``backend`` selects the execution engine:
+Both functions are thin wrappers over the plan/executor engine
+(:mod:`repro.engine`): every call resolves a :class:`repro.engine.DwtPlan`
+from the LRU plan cache keyed on
+``(wavelet, scheme, levels, shape, dtype, backend, optimize, fuse,
+boundary)`` — the scheme algebra, per-level step sequences, block shapes
+and halo pads are computed once per key and reused across calls.  Input
+may be batched ``(..., H, W)`` on both backends; batches run in a single
+kernel launch per barrier (a leading grid dimension on the Pallas path).
+
+Parameters shared by :func:`dwt2` and :func:`idwt2`:
+
+``backend``
     * "jnp"     — pure-jnp reference (roll-based periodic convolution)
     * "pallas"  — the TPU Pallas kernels (interpret=True on CPU)
-and ``optimize=True`` applies the paper's Section 5 operation-reduction
-split (identical values, fewer MACs).
+``optimize``
+    ``True`` applies the paper's Section 5 operation-reduction split
+    (identical values, fewer MACs).
+``fuse``
+    * "none"    — paper-faithful: one barrier (pallas_call) per step
+    * "scheme"  — one pallas_call per level (compound halo); affects
+      only the pallas backend (jnp has no kernel granularity to fuse)
+    * "levels"  — the whole multi-level pyramid is one traced
+      computation; level kernels chain without returning to Python
+      between levels (fastest for repeated production traffic)
+``boundary``
+    Signal-extension rule at image edges.  Only ``"periodic"`` is
+    implemented (matching the paper's polyphase algebra, where every
+    z-transform shift is a cyclic shift); the parameter is part of the
+    plan key so additional modes can be added without API changes.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import List, Sequence, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import optimize as O
-from repro.core import schemes as S
+from repro.engine.pyramid import Detail, Pyramid  # re-exported for compat
 
-Detail = Tuple[jax.Array, jax.Array, jax.Array]
-
-
-@dataclasses.dataclass
-class Pyramid:
-    ll: jax.Array
-    details: List[Detail]  # coarsest first
-
-    def tree_flatten(self):
-        return (self.ll, self.details), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-    @property
-    def levels(self) -> int:
-        return len(self.details)
+__all__ = ["Pyramid", "dwt2", "idwt2", "flatten_pyramid",
+           "unflatten_pyramid"]
 
 
-jax.tree_util.register_pytree_node(
-    Pyramid,
-    lambda p: ((p.ll, p.details), None),
-    lambda aux, ch: Pyramid(ch[0], ch[1]),
-)
-
-
-def _single_level(x: jax.Array, wavelet: str, scheme: str, optimize: bool,
-                  backend: str, inverse: bool = False):
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.apply_scheme_pallas(
-            x, wavelet=wavelet, scheme=scheme, optimize=optimize,
-            inverse=inverse)
-    if inverse:
-        sch = S.build_inverse_scheme(wavelet, scheme)
-        return S.from_planes(S.apply_scheme(sch, x))
-    planes = S.to_planes(x)
-    if optimize:
-        sch = O.build_optimized(wavelet, scheme)
-        return O.apply_opt_scheme(sch, planes)
-    sch = S.build_scheme(wavelet, scheme)
-    return S.apply_scheme(sch, planes)
+def _plan_for(shape, dtype, wavelet, levels, scheme, optimize, backend,
+              fuse, boundary):
+    from repro import engine as E  # deferred: core <-> engine import cycle
+    return E.get_plan(wavelet=wavelet, scheme=scheme, levels=levels,
+                      shape=tuple(shape), dtype=str(dtype), backend=backend,
+                      optimize=optimize, fuse=fuse, boundary=boundary)
 
 
 def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
          scheme: str = "ns-polyconv", optimize: bool = False,
-         backend: str = "jnp") -> Pyramid:
-    """Multi-level forward 2-D DWT of an image (..., H, W).
+         backend: str = "jnp", fuse: str = "none",
+         boundary: str = "periodic") -> Pyramid:
+    """Multi-level forward 2-D DWT of a (batch of) image(s) (..., H, W).
 
-    H and W must be divisible by 2**levels.
+    H and W must be divisible by 2**levels.  Dispatches through the
+    plan-cache engine; see the module docstring for ``backend`` /
+    ``optimize`` / ``fuse`` / ``boundary``.
     """
-    h, w = x.shape[-2], x.shape[-1]
-    if h % (1 << levels) or w % (1 << levels):
-        raise ValueError(
-            f"image {h}x{w} not divisible by 2^levels={1 << levels}")
-    details: List[Detail] = []
-    ll = x
-    for _ in range(levels):
-        ll, hl, lh, hh = _single_level(ll, wavelet, scheme, optimize, backend)
-        details.append((hl, lh, hh))
-    return Pyramid(ll=ll, details=details[::-1])
+    x = jnp.asarray(x)
+    plan = _plan_for(x.shape, x.dtype, wavelet, levels, scheme, optimize,
+                     backend, fuse, boundary)
+    return plan.execute(x)
 
 
 def idwt2(pyr: Pyramid, wavelet: str = "cdf97",
           scheme: str = "ns-polyconv", optimize: bool = False,
-          backend: str = "jnp") -> jax.Array:
-    """Inverse of :func:`dwt2`."""
-    ll = pyr.ll
-    for hl, lh, hh in pyr.details:  # coarsest first
-        ll = _single_level((ll, hl, lh, hh), wavelet, scheme, optimize,
-                           backend, inverse=True)
-    return ll
+          backend: str = "jnp", fuse: str = "none",
+          boundary: str = "periodic") -> jax.Array:
+    """Inverse of :func:`dwt2` (shares the forward transform's plan)."""
+    ll = jnp.asarray(pyr.ll)
+    levels = pyr.levels
+    shape = ll.shape[:-2] + (ll.shape[-2] << levels, ll.shape[-1] << levels)
+    plan = _plan_for(shape, ll.dtype, wavelet, levels, scheme, optimize,
+                     backend, fuse, boundary)
+    return plan.execute_inverse(pyr)
 
 
 def flatten_pyramid(pyr: Pyramid) -> jax.Array:
@@ -124,4 +111,4 @@ def unflatten_pyramid(x: jax.Array, levels: int) -> Pyramid:
         hh = cur[..., h:, w:]
         details.append((hl, lh, hh))
         cur = ll
-    return Pyramid(ll=cur, details=details[::-1])
+    return Pyramid(cur, details[::-1])

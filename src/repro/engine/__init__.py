@@ -1,0 +1,17 @@
+"""Plan/executor engine: batched, multi-level, cached DWT execution.
+
+Separates *what* to compute (the scheme algebra of ``repro.core``) from
+*how* to execute it (compiled, cached, batched plans over the jnp and
+Pallas backends).  ``repro.core.transform.dwt2`` / ``idwt2`` are thin
+wrappers over this package.
+"""
+from repro.engine.cache import (PlanCache, clear_plan_cache, get_plan,
+                                global_cache, plan_cache_stats)
+from repro.engine.plan import (DwtPlan, LevelSpec, PlanKey, Pyramid,
+                               build_plan, scheme_steps)
+
+__all__ = [
+    "DwtPlan", "LevelSpec", "PlanKey", "Pyramid", "build_plan",
+    "scheme_steps", "PlanCache", "get_plan", "global_cache",
+    "plan_cache_stats", "clear_plan_cache",
+]

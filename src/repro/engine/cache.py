@@ -1,0 +1,91 @@
+"""LRU cache of compiled :class:`~repro.engine.plan.DwtPlan` objects.
+
+``get_plan(...)`` is the engine's front door: it normalizes the arguments
+into a :class:`~repro.engine.plan.PlanKey` and returns a shared plan,
+building one only on a miss.  Hit/miss counters are exposed so callers
+(tests, benchmarks) can verify that repeated same-shape traffic pays zero
+rebuild cost.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Optional, Tuple
+
+from repro.engine.plan import DwtPlan, PlanKey, build_plan
+
+
+class PlanCache:
+    """Thread-safe LRU mapping PlanKey -> DwtPlan with hit/miss counters."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._plans: "OrderedDict[PlanKey, DwtPlan]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: PlanKey,
+            builder: Callable[[PlanKey], DwtPlan] = build_plan) -> DwtPlan:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self.hits += 1
+                return plan
+        # build outside the lock: scheme algebra + jit wrapping can be slow
+        plan = builder(key)
+        with self._lock:
+            if key in self._plans:      # racing builder won; reuse theirs
+                self.hits += 1
+                return self._plans[key]
+            self.misses += 1
+            self._plans[key] = plan
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+            return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._plans
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._plans), "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+_GLOBAL = PlanCache()
+
+
+def global_cache() -> PlanCache:
+    return _GLOBAL
+
+
+def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
+             levels: int = 1, shape: Tuple[int, ...], dtype: str = "float32",
+             backend: str = "jnp", optimize: bool = False,
+             fuse: str = "none", boundary: str = "periodic",
+             cache: Optional[PlanCache] = None) -> DwtPlan:
+    """Fetch (or build) the plan for one transform configuration."""
+    key = PlanKey(wavelet=wavelet, scheme=scheme, levels=int(levels),
+                  shape=tuple(int(d) for d in shape), dtype=str(dtype),
+                  backend=backend, optimize=bool(optimize), fuse=fuse,
+                  boundary=boundary)
+    # explicit None check: an empty PlanCache is falsy (__len__ == 0)
+    return (_GLOBAL if cache is None else cache).get(key)
+
+
+def plan_cache_stats() -> dict:
+    return _GLOBAL.stats()
+
+
+def clear_plan_cache() -> None:
+    _GLOBAL.clear()

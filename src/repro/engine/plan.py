@@ -1,0 +1,186 @@
+"""DWT execution plans: *what* to compute, resolved once per configuration.
+
+The scheme algebra (``repro.core.schemes`` / ``repro.core.optimize``) says
+*what* a transform is — a sequence of 4x4 polyphase-matrix steps.  The seed
+implementation re-ran that algebra (pure-Python Laurent-polynomial
+products) on every ``dwt2`` call and re-decided block shapes on every
+``pallas_call``.  A :class:`DwtPlan` does all of that exactly once per
+
+    (wavelet, scheme, levels, shape, dtype, backend, optimize, fuse,
+     boundary)
+
+key: per-level :class:`~repro.kernels.polyphase.StepSpec` sequences
+(forward and inverse), per-level block shapes and halo pads, and the
+compiled executor callables.  Plans are cheap to hold and are shared
+through the LRU cache in :mod:`repro.engine.cache`, so repeated
+same-configuration calls have zero rebuild cost.
+
+Execution semantics (see :mod:`repro.engine.executor`):
+
+* both backends accept batched ``(..., H, W)`` input;
+* ``fuse="none"``   — paper-faithful: one barrier (pallas_call) per step;
+* ``fuse="scheme"`` — one pallas_call per level (compound halo);
+* ``fuse="levels"`` — the whole multi-level pyramid is a single traced
+  computation: level kernels are chained without returning to Python
+  between levels, and each level runs as one fused kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# the leaf pyramid module must be imported before anything from repro.core:
+# repro.core.__init__ imports transform, which imports it back
+from repro.engine.pyramid import Pyramid
+
+from repro.core import optimize as O
+from repro.core import schemes as S
+from repro.kernels import polyphase as PP
+
+FUSE_MODES = ("none", "scheme", "levels")
+BOUNDARIES = ("periodic",)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Everything that determines a compiled execution plan."""
+
+    wavelet: str
+    scheme: str
+    levels: int
+    shape: Tuple[int, ...]  # full input shape, batch dims included
+    dtype: str
+    backend: str
+    optimize: bool
+    fuse: str
+    boundary: str
+
+
+@functools.lru_cache(maxsize=512)
+def scheme_steps(wavelet: str, scheme: str, optimize: bool,
+                 inverse: bool) -> Tuple[PP.StepSpec, ...]:
+    """Scheme algebra -> StepSpec sequence, memoized across all plans."""
+    if inverse:
+        return tuple(PP.steps_of(S.build_inverse_scheme(wavelet, scheme)))
+    sch = (O.build_optimized(wavelet, scheme) if optimize
+           else S.build_scheme(wavelet, scheme))
+    return tuple(PP.steps_of(sch))
+
+
+@dataclasses.dataclass
+class LevelSpec:
+    """Static execution parameters of one pyramid level."""
+
+    index: int                        # 0 = finest (first forward level)
+    image_shape: Tuple[int, int]      # (H, W) consumed by the forward step
+    plane_shape: Tuple[int, int]      # (H/2, W/2) polyphase planes
+    fwd_steps: Tuple[PP.StepSpec, ...]
+    inv_steps: Tuple[PP.StepSpec, ...]
+    block: Tuple[int, int]            # resolved block edges (bh, bw)
+    padded_shape: Tuple[int, int]     # plane dims padded to block multiples
+    halo: int                         # halo pad per pallas_call (fuse-aware)
+
+
+@dataclasses.dataclass
+class DwtPlan:
+    """A fully-resolved, reusable multi-level DWT executor.
+
+    Build via :func:`build_plan` (or, preferably, through the LRU cache in
+    :mod:`repro.engine.cache`), then call :meth:`execute` /
+    :meth:`execute_inverse` any number of times with arrays of exactly
+    ``key.shape`` / the matching pyramid.
+    """
+
+    key: PlanKey
+    level_specs: Tuple[LevelSpec, ...]
+    _forward: Optional[object] = None   # set by the executor module
+    _inverse: Optional[object] = None
+
+    @property
+    def num_steps(self) -> int:
+        """Barriers per image over all levels (the paper's step count)."""
+        return sum(len(ls.fwd_steps) for ls in self.level_specs)
+
+    @property
+    def pallas_calls(self) -> int:
+        """Kernel launches per execution under this plan's fuse mode.
+
+        Zero for the jnp backend, which launches no kernels (its fuse
+        modes only control trace granularity).
+        """
+        if self.key.backend != "pallas":
+            return 0
+        if self.key.fuse == "none":
+            return self.num_steps
+        return len(self.level_specs)
+
+    def execute(self, x: jax.Array) -> Pyramid:
+        """Forward transform of ``x`` (shape must equal ``key.shape``)."""
+        x = jnp.asarray(x)
+        if tuple(x.shape) != self.key.shape:
+            raise ValueError(
+                f"plan built for shape {self.key.shape}, got {x.shape}")
+        ll, details = self._forward(x)
+        return Pyramid(ll=ll, details=list(details))
+
+    def execute_inverse(self, pyr: Pyramid) -> jax.Array:
+        """Inverse transform of a pyramid produced by :meth:`execute`."""
+        if pyr.levels != self.key.levels:
+            raise ValueError(
+                f"plan built for {self.key.levels} levels, "
+                f"pyramid has {pyr.levels}")
+        return self._inverse(pyr.ll, tuple(tuple(d) for d in pyr.details))
+
+
+def _resolve_level(index: int, h: int, w: int, key: PlanKey,
+                   fwd: Tuple[PP.StepSpec, ...],
+                   inv: Tuple[PP.StepSpec, ...],
+                   block_target: Tuple[int, int]) -> LevelSpec:
+    hp, wp = h // 2, w // 2
+    bh, hp2 = PP._pick_block(hp, block_target[0])
+    bw, wp2 = PP._pick_block(wp, block_target[1])
+    if key.fuse == "none":
+        halo = max((st.halo for st in fwd), default=0)
+    else:
+        halo = sum(st.halo for st in fwd)
+    return LevelSpec(index=index, image_shape=(h, w), plane_shape=(hp, wp),
+                     fwd_steps=fwd, inv_steps=inv, block=(bh, bw),
+                     padded_shape=(hp2, wp2), halo=halo)
+
+
+def build_plan(key: PlanKey,
+               block_target: Tuple[int, int] = (256, 512)) -> DwtPlan:
+    """Resolve a :class:`PlanKey` into an executable :class:`DwtPlan`."""
+    if key.backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {key.backend!r}")
+    if key.fuse not in FUSE_MODES:
+        raise ValueError(f"unknown fuse mode {key.fuse!r}; "
+                         f"available: {FUSE_MODES}")
+    if key.boundary not in BOUNDARIES:
+        raise ValueError(f"unknown boundary {key.boundary!r}; "
+                         f"available: {BOUNDARIES}")
+    if len(key.shape) < 2:
+        raise ValueError(f"input must be (..., H, W), got {key.shape}")
+    if key.levels < 1:
+        raise ValueError(f"levels must be >= 1, got {key.levels}")
+    h, w = key.shape[-2], key.shape[-1]
+    if h % (1 << key.levels) or w % (1 << key.levels):
+        raise ValueError(
+            f"image {h}x{w} not divisible by 2^levels={1 << key.levels}")
+
+    fwd = scheme_steps(key.wavelet, key.scheme, key.optimize, False)
+    inv = scheme_steps(key.wavelet, key.scheme, False, True)
+    specs = []
+    for lvl in range(key.levels):
+        specs.append(_resolve_level(lvl, h >> lvl, w >> lvl, key, fwd, inv,
+                                    block_target))
+    plan = DwtPlan(key=key, level_specs=tuple(specs))
+
+    from repro.engine import executor as E
+    plan._forward = E.make_forward(plan)
+    plan._inverse = E.make_inverse(plan)
+    return plan

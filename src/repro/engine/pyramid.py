@@ -1,0 +1,34 @@
+"""The engine's output container (leaf module — imports only jax).
+
+Kept dependency-free so both ``repro.engine.plan`` and
+``repro.core.transform`` can import it without creating an import cycle
+between the core API layer and the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+
+Detail = Tuple[jax.Array, jax.Array, jax.Array]
+
+
+@dataclasses.dataclass
+class Pyramid:
+    """Multi-level DWT output: coarsest LL + per-level detail triples
+    (coarsest first)."""
+
+    ll: jax.Array
+    details: List[Detail]
+
+    @property
+    def levels(self) -> int:
+        return len(self.details)
+
+
+jax.tree_util.register_pytree_node(
+    Pyramid,
+    lambda p: ((p.ll, p.details), None),
+    lambda aux, ch: Pyramid(ch[0], ch[1]),
+)

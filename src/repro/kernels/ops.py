@@ -1,9 +1,12 @@
 """Public jit'd wrappers for the Pallas DWT kernels.
 
-``apply_scheme_pallas`` is the single dispatch point used by
-``repro.core.transform`` (backend="pallas"), the benchmarks and the tests.
-Scheme construction happens at trace time (static args); only the plane
-arithmetic is traced.
+``apply_scheme_pallas`` is the single-level dispatch point used by the
+benchmarks and the kernel tests; multi-level execution goes through the
+plan/executor engine (``repro.engine``), which shares the same memoized
+scheme-step construction (``repro.engine.plan.scheme_steps``) so a scheme
+is factored into StepSpecs exactly once per configuration process-wide.
+Only the plane arithmetic is traced; inputs may be batched ``(..., H, W)``
+— the batch rides the kernel's leading grid dimension.
 """
 from __future__ import annotations
 
@@ -16,6 +19,12 @@ import jax.numpy as jnp
 from repro.core import optimize as O
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
+
+
+def _scheme_steps(wavelet: str, scheme: str, optimize: bool, inverse: bool):
+    # deferred import: repro.engine.plan imports this module's package
+    from repro.engine.plan import scheme_steps
+    return scheme_steps(wavelet, scheme, optimize, inverse)
 
 
 @functools.partial(
@@ -31,19 +40,16 @@ def apply_scheme_pallas(x, *, wavelet: str = "cdf97",
                         interpret: Optional[bool] = None):
     """Single-level 2-D DWT step sequence on TPU via Pallas.
 
-    Forward: ``x`` is an image (H, W) -> returns (LL, HL, LH, HH) planes.
-    Inverse: ``x`` is the 4-tuple of planes -> returns the image.
+    Forward: ``x`` is a (batch of) image(s) (..., H, W) -> returns the
+    (LL, HL, LH, HH) planes, each (..., H/2, W/2).
+    Inverse: ``x`` is the 4-tuple of planes -> returns the image(s).
     """
     if inverse:
-        sch = S.build_inverse_scheme(wavelet, scheme)
-        steps = PP.steps_of(sch)
-        planes = tuple(x)
-        out = PP.apply_steps_pallas(steps, planes, fuse=fuse, block=block,
+        steps = _scheme_steps(wavelet, scheme, False, True)
+        out = PP.apply_steps_pallas(steps, tuple(x), fuse=fuse, block=block,
                                     interpret=interpret)
         return S.from_planes(out)
-    sch = (O.build_optimized(wavelet, scheme) if optimize
-           else S.build_scheme(wavelet, scheme))
-    steps = PP.steps_of(sch)
+    steps = _scheme_steps(wavelet, scheme, optimize, False)
     planes = S.to_planes(x)
     return PP.apply_steps_pallas(steps, planes, fuse=fuse, block=block,
                                  interpret=interpret)
@@ -52,11 +58,16 @@ def apply_scheme_pallas(x, *, wavelet: str = "cdf97",
 def scheme_stats(wavelet: str, scheme: str, optimize: bool,
                  shape: Tuple[int, int], itemsize: int = 4,
                  fuse: str = "none") -> dict:
-    """Step count / op count / ideal HBM bytes for the roofline model."""
+    """Step count / op count / ideal HBM bytes for the roofline model.
+
+    ``fuse`` accepts the engine's level-granularity modes too:
+    "scheme" and "levels" both collapse one level to one pallas_call.
+    """
     sch = (O.build_optimized(wavelet, scheme) if optimize
            else S.build_scheme(wavelet, scheme))
     steps = PP.steps_of(sch)
-    calls = 1 if fuse == "scheme" else len(steps)
+    kfuse = "scheme" if fuse in ("scheme", "levels") else "none"
+    calls = 1 if kfuse == "scheme" else len(steps)
     return {
         "wavelet": wavelet,
         "scheme": scheme + ("+opt" if optimize else ""),
@@ -64,5 +75,5 @@ def scheme_stats(wavelet: str, scheme: str, optimize: bool,
         "steps": len(steps),
         "pallas_calls": calls,
         "ops": sch.num_ops,
-        "hbm_bytes": PP.scheme_hbm_bytes(steps, shape, itemsize, fuse=fuse),
+        "hbm_bytes": PP.scheme_hbm_bytes(steps, shape, itemsize, fuse=kfuse),
     }

@@ -3,7 +3,8 @@
 TPU adaptation of the paper's execution model (DESIGN.md §2):
 
 * one scheme *step* (barrier)  ->  one ``pl.pallas_call``: the four
-  polyphase planes make one full round trip through HBM;
+  polyphase planes make one full round trip through HBM; batched input
+  rides a leading grid dimension (one launch covers the whole batch);
 * GPU on-chip shared memory     ->  a VMEM scratch window per plane, filled
   by an explicit ``pltpu.make_async_copy`` DMA of the block + halo from a
   wrap-padded HBM plane (inputs are kept in ``ANY`` memory space);
@@ -112,32 +113,60 @@ def _apply_steps_windows(steps: Sequence[StepSpec], xs: Sequence[jax.Array]
 # The pallas_call
 # ---------------------------------------------------------------------------
 
-def _pick_block(n: int, target: int) -> int:
-    """Largest divisor of n that is <= target (block must tile the plane)."""
+def _pick_block(n: int, target: int) -> Tuple[int, int]:
+    """Block edge and padded plane size for one axis: ``(b, n_padded)``.
+
+    Prefer an exact divisor of ``n`` close to the target (no padding); when
+    only tiny divisors exist (prime / non-smooth plane dims) keep the
+    target-size block and pad the plane up to the next block multiple — the
+    caller slices the output back to ``n``.  This removes the old cliff
+    where e.g. a 509-wide plane degraded to 1-wide blocks.
+    """
     b = min(n, target)
-    while n % b:
-        b -= 1
-    return b
+    d = b
+    while n % d:
+        d -= 1
+    if 2 * d >= b:
+        return d, n
+    return b, -(-n // b) * b
+
+
+def _periodic_pad(p: jax.Array, r: int, hp2: int, wp2: int) -> jax.Array:
+    """Extend a plane (..., hp, wp) to (..., hp2 + 2r, wp2 + 2r).
+
+    Every output sample holds the periodic (mod hp / mod wp) extension of
+    the *original* plane, so block padding never changes boundary
+    semantics: rows hp..hp2-1 are the wrap-around of rows 0.., not garbage.
+    """
+    hp, wp = p.shape[-2:]
+    if r == 0 and (hp2, wp2) == (hp, wp):
+        return p
+    if (hp2, wp2) == (hp, wp):
+        cfg = [(0, 0)] * (p.ndim - 2) + [(r, r), (r, r)]
+        return jnp.pad(p, cfg, mode="wrap")
+    ri = jnp.arange(-r, hp2 + r) % hp
+    ci = jnp.arange(-r, wp2 + r) % wp
+    return p[..., ri[:, None], ci[None, :]]
 
 
 def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
                        block: Tuple[int, int], interpret: Optional[bool],
                        compute_dtype=jnp.float32):
-    """One pallas_call executing ``steps`` (fused) over the four planes."""
+    """One pallas_call executing ``steps`` (fused) over the four planes.
+
+    ``planes`` are batched ``(B, hp, wp)``; the batch is the leading grid
+    dimension, so one call covers the whole batch with no vmap round trip.
+    """
     if interpret is None:
         interpret = _default_interpret()
     r_total = sum(st.halo for st in steps)
-    hp, wp = planes[0].shape
-    bh = _pick_block(hp, block[0])
-    bw = _pick_block(wp, block[1])
-    grid = (hp // bh, wp // bw)
+    nb, hp, wp = planes[0].shape
+    bh, hp2 = _pick_block(hp, block[0])
+    bw, wp2 = _pick_block(wp, block[1])
+    grid = (nb, hp2 // bh, wp2 // bw)
     out_dtype = planes[0].dtype
 
-    if r_total > 0:
-        padded = [jnp.pad(p, r_total, mode="wrap") for p in planes]
-    else:
-        padded = list(planes)
-
+    padded = [_periodic_pad(p, r_total, hp2, wp2) for p in planes]
     win = (bh + 2 * r_total, bw + 2 * r_total)
 
     def kernel(*refs):
@@ -145,12 +174,14 @@ def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
         o_refs = refs[4:8]
         scratch = refs[8:12]
         sems = refs[12]
-        i = pl.program_id(0)
-        j = pl.program_id(1)
+        b = pl.program_id(0)
+        i = pl.program_id(1)
+        j = pl.program_id(2)
         copies = []
         for k in range(4):
             cp = pltpu.make_async_copy(
-                x_refs[k].at[pl.ds(i * bh, win[0]), pl.ds(j * bw, win[1])],
+                x_refs[k].at[b, pl.ds(i * bh, win[0]),
+                             pl.ds(j * bw, win[1])],
                 scratch[k],
                 sems.at[k],
             )
@@ -161,20 +192,22 @@ def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
         xs = [s[:, :].astype(compute_dtype) for s in scratch]
         ys = _apply_steps_windows(steps, xs)
         for k in range(4):
-            o_refs[k][:, :] = ys[k].astype(out_dtype)
+            o_refs[k][0, :, :] = ys[k].astype(out_dtype)
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY) for _ in range(4)],
-        out_specs=[pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+        out_specs=[pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j))
                    for _ in range(4)],
-        out_shape=[jax.ShapeDtypeStruct((hp, wp), out_dtype)
+        out_shape=[jax.ShapeDtypeStruct((nb, hp2, wp2), out_dtype)
                    for _ in range(4)],
         scratch_shapes=[pltpu.VMEM(win, planes[0].dtype) for _ in range(4)]
         + [pltpu.SemaphoreType.DMA((4,))],
         interpret=interpret,
     )(*padded)
+    if (hp2, wp2) != (hp, wp):
+        out = [o[:, :hp, :wp] for o in out]
     return tuple(out)
 
 
@@ -185,23 +218,30 @@ def apply_steps_pallas(steps: Sequence[StepSpec], planes, *,
                        compute_dtype=jnp.float32):
     """Execute a scheme's steps on the four polyphase planes.
 
+    ``planes`` may carry arbitrary leading batch dims ``(..., hp, wp)``;
+    they are flattened into the kernel's leading grid dimension.
+
     fuse="none"   — paper-faithful: one pallas_call (HBM round trip) per
                     step; the step count is the paper's barrier count.
     fuse="scheme" — beyond-paper: a single pallas_call with compound halo
                     (overlapped-tile recompute).
     """
     steps = tuple(steps)
-    if fuse == "scheme":
-        return _steps_pallas_call(steps, planes, block=block,
-                                  interpret=interpret,
-                                  compute_dtype=compute_dtype)
-    if fuse != "none":
+    if fuse not in ("none", "scheme"):
         raise ValueError(f"unknown fuse mode {fuse!r}")
-    for st in steps:
-        planes = _steps_pallas_call((st,), planes, block=block,
+    planes = tuple(jnp.asarray(p) for p in planes)
+    batch = planes[0].shape[:-2]
+    p3 = [p.reshape((-1,) + p.shape[-2:]) for p in planes]
+    if fuse == "scheme":
+        p3 = _steps_pallas_call(steps, p3, block=block,
+                                interpret=interpret,
+                                compute_dtype=compute_dtype)
+    else:
+        for st in steps:
+            p3 = _steps_pallas_call((st,), p3, block=block,
                                     interpret=interpret,
                                     compute_dtype=compute_dtype)
-    return planes
+    return tuple(p.reshape(batch + p.shape[-2:]) for p in p3)
 
 
 # ---------------------------------------------------------------------------
@@ -220,13 +260,13 @@ def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
     """
     h, w = shape
     hp, wp = h // 2, w // 2
-    bh = _pick_block(hp, block[0])
-    bw = _pick_block(wp, block[1])
+    bh, hp2 = _pick_block(hp, block[0])
+    bw, wp2 = _pick_block(wp, block[1])
     total = 0
     groups = [steps] if fuse == "scheme" else [[st] for st in steps]
     for g in groups:
         r = sum(st.halo for st in g)
-        read = 4 * (hp // bh) * (wp // bw) * (bh + 2 * r) * (bw + 2 * r)
-        write = 4 * hp * wp
+        read = 4 * (hp2 // bh) * (wp2 // bw) * (bh + 2 * r) * (bw + 2 * r)
+        write = 4 * hp2 * wp2
         total += (read + write) * itemsize
     return total
