@@ -1,7 +1,13 @@
-"""Benchmark: per-kernel statistics — steps, pallas_calls, MACs/quad, halo,
-ideal HBM bytes and the projected v5e step time per scheme (the kernel-
-level roofline; the numbers behind the §Perf DWT iteration log), plus the
-engine's per-plan launch summary for batched multi-level execution."""
+"""Benchmark: per-kernel statistics — steps, pallas_calls, MACs/quad (raw
+matrix walk vs compiled tap program), halo, ideal HBM bytes and the
+projected v5e step time per scheme (the kernel-level roofline; the
+numbers behind the §Perf DWT iteration log), plus the engine's per-plan
+launch summary for batched multi-level execution.
+
+Operation counts come straight from the compiled tap programs the
+kernels execute (``scheme_stats``), so the compute-bound legs of the
+roofline reflect the fold/CSE/rank-1 passes, not the symbolic matrix
+sizes."""
 from repro import engine as E
 from repro.core import optimize as O
 from repro.core import schemes as S
@@ -23,22 +29,32 @@ def engine_plan_summary(shape=(8, 2048, 2048), levels: int = 3,
     print(f"# engine plans: pallas_calls per execution "
           f"(batch={shape[0]}, {shape[-2]}x{shape[-1]}, {levels} levels, "
           f"{wavelet})")
-    print("scheme,fuse,steps_total,pallas_calls,finest_block,finest_halo")
+    print("scheme,fuse,steps_total,pallas_calls,finest_block,finest_halo,"
+          "finest_macs")
     cache = E.PlanCache()
+    rows = []
     for sc in S.SCHEMES:
         for fuse in ("none", "scheme", "levels"):
             plan = E.get_plan(wavelet=wavelet, scheme=sc, levels=levels,
                               shape=shape, dtype="float32",
                               backend="pallas", fuse=fuse, cache=cache)
             ls = plan.level_specs[0]
+            macs = plan.compiled_stats()["macs"]
+            rows.append({"scheme": sc, "fuse": fuse,
+                         "steps": plan.num_steps,
+                         "pallas_calls": plan.pallas_calls,
+                         "block": list(ls.block), "halo": ls.halo,
+                         "macs": macs})
             print(f"{sc},{fuse},{plan.num_steps},{plan.pallas_calls},"
-                  f"{ls.block[0]}x{ls.block[1]},{ls.halo}")
+                  f"{ls.block[0]}x{ls.block[1]},{ls.halo},{macs}")
+    return rows
 
 
 def main():
     print("# DWT kernel roofline on v5e (4096x4096 f32 image)")
-    print("wavelet,scheme,variant,steps,pallas_calls,ops_per_quad,halo,"
-          "hbm_MB,t_mem_us,t_compute_us,bound")
+    print("wavelet,scheme,variant,steps,pallas_calls,ops_raw,ops_compiled,"
+          "halo,hbm_MB,t_mem_us,t_compute_us,bound")
+    rows = []
     for wname in ("cdf53", "cdf97", "dd137"):
         for sc in S.SCHEMES:
             for label, optimize, fuse in (
@@ -46,20 +62,25 @@ def main():
                     ("paper+opt5", True, "none"),
                     ("fused(beyond)", True, "scheme")):
                 st = K.scheme_stats(wname, sc, optimize, SHAPE, 4, fuse)
-                sch = (O.build_optimized(wname, sc) if optimize
-                       else S.build_scheme(wname, sc))
                 quads = SHAPE[0] * SHAPE[1] / 4
                 t_mem = st["hbm_bytes"] / HBM_BW * 1e6
                 # MACs: 2 flops each; VPU (not MXU) executes these:
-                # ~1/4 of chip peak is a fair VPU bound for f32 FMA
-                t_cmp = (sch.num_ops * quads * 2) / (PEAK / 4) * 1e6
+                # ~1/4 of chip peak is a fair VPU bound for f32 FMA.
+                # The compiled tap program is what actually runs.
+                ops = st.get("ops_compiled", st["ops"])
+                t_cmp = (ops * quads * 2) / (PEAK / 4) * 1e6
                 bound = "memory" if t_mem > t_cmp else "compute"
+                rows.append({**{k: v for k, v in st.items()},
+                             "variant": label, "t_mem_us": t_mem,
+                             "t_compute_us": t_cmp, "bound": bound})
                 print(f"{wname},{sc},{label},{st['steps']},"
-                      f"{st['pallas_calls']},{sch.num_ops},{sch.max_halo},"
+                      f"{st['pallas_calls']},{st['ops']},{ops},"
+                      f"{st.get('halo_compiled', '-')},"
                       f"{st['hbm_bytes']/1e6:.1f},{t_mem:.0f},{t_cmp:.0f},"
                       f"{bound}")
     print()
-    engine_plan_summary()
+    plans = engine_plan_summary()
+    return {"roofline": rows, "plans": plans}
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 
 Sections:
   1. table1   — paper Table 1 (steps + operation counts), exact-match vs
-                the paper's OpenCL column.
+                the paper's OpenCL column, plus the tap-program
+                compiler's lowered/compiled MAC counts.
   2. fig789   — paper Figures 7/8/9 (throughput vs image size per scheme):
                 CPU-measured + v5e HBM-model projections.
   3. engine   — plan/executor engine: batched images/sec, plan-cached vs
@@ -14,32 +15,52 @@ Sections:
   5. compress — DWT gradient compression (framework integration).
   6. roofline — per-(arch x shape x mesh) summary from the dry-run
                 artifacts (if present).
+
+``--json PATH`` additionally writes every section's rows as a single
+machine-readable document (throughput numbers, op counts, and the
+op-count regression verdict), for CI trend tracking:
+
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_2.json
 """
+import json
 import sys
 import time
 
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    json_path = None
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json")
+        if i + 1 >= len(sys.argv):
+            raise SystemExit("--json requires a path argument")
+        json_path = sys.argv[i + 1]
     t0 = time.time()
+    doc = {"quick": quick}
 
     from benchmarks import table1_ops
     print("=" * 72)
-    matched, total = table1_ops.main()
+    matched, total, regressions, t1_rows = table1_ops.main()
     assert matched >= 13, f"Table 1 regression: {matched}/{total}"
+    assert regressions == 0, \
+        f"op-count regression: {regressions} schemes compiled WORSE"
+    doc["table1"] = {"rows": t1_rows, "paper_cells_matched": matched,
+                     "paper_cells_total": total,
+                     "compiler_op_regressions": regressions}
 
     print("=" * 72)
     from benchmarks import throughput
-    throughput.main(sizes=(512, 1024) if quick else (512, 1024, 2048))
+    doc["fig789"] = throughput.main(
+        sizes=(512, 1024) if quick else (512, 1024, 2048))
 
     print("=" * 72)
-    throughput.engine_throughput(
+    doc["engine"] = throughput.engine_throughput(
         batch_sizes=(1, 8) if quick else (1, 8, 32),
         reps=3 if quick else 5)
 
     print("=" * 72)
     from benchmarks import kernel_bench
-    kernel_bench.main()
+    doc["kernels"] = kernel_bench.main()
 
     print("=" * 72)
     from benchmarks import compression_bench
@@ -53,7 +74,12 @@ def main() -> None:
         print(f"# roofline artifacts not available: {e}")
 
     print("=" * 72)
-    print(f"# benchmarks completed in {time.time() - t0:.1f}s")
+    doc["elapsed_s"] = time.time() - t0
+    print(f"# benchmarks completed in {doc['elapsed_s']:.1f}s")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+        print(f"# wrote machine-readable results to {json_path}")
 
 
 if __name__ == "__main__":

@@ -87,6 +87,7 @@ def engine_throughput(batch_sizes=(1, 8, 32), n: int = 128,
           f"dispatch ({wavelet}/{scheme}, {levels} levels)")
     print("backend,batch,size,seed_img_per_s,engine_img_per_s,speedup")
     rng = np.random.default_rng(0)
+    rows = []
     for b in batch_sizes:
         x = jnp.asarray(rng.standard_normal((b, n, n)), jnp.float32)
         t_seed = _time(
@@ -95,6 +96,9 @@ def engine_throughput(batch_sizes=(1, 8, 32), n: int = 128,
         t_eng = _time(
             lambda: T.dwt2(x, wavelet=wavelet, levels=levels, scheme=scheme,
                            fuse="levels"), reps)
+        rows.append({"backend": "jnp", "batch": b, "size": n,
+                     "seed_img_per_s": b / t_seed,
+                     "engine_img_per_s": b / t_eng})
         print(f"jnp,{b},{n},{b / t_seed:.1f},{b / t_eng:.1f},"
               f"{t_seed / t_eng:.2f}x")
 
@@ -108,10 +112,13 @@ def engine_throughput(batch_sizes=(1, 8, 32), n: int = 128,
     t_eng = _time(
         lambda: T.dwt2(x, wavelet=wavelet, levels=levels, scheme=scheme,
                        backend="pallas", fuse="levels"), reps)
+    rows.append({"backend": "pallas-interpret", "batch": b, "size": n,
+                 "seed_img_per_s": b / t_loop,
+                 "engine_img_per_s": b / t_eng})
     print(f"pallas-interpret,{b},{n},{b / t_loop:.1f},{b / t_eng:.1f},"
           f"{t_loop / t_eng:.2f}x")
     print(f"# plan cache: {E.plan_cache_stats()}")
-    return {"speedup": t_loop / t_eng}
+    return {"speedup": t_loop / t_eng, "rows": rows}
 
 
 def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
@@ -119,6 +126,7 @@ def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
     print("wavelet,scheme,size,cpu_measured_GBps,tpu_model_GBps,"
           "tpu_model_fused_GBps,steps")
     results = {}
+    rows = []
     for wname in wavelets:
         for sc in S.SCHEMES:
             steps = S.build_scheme(wname, sc).num_steps
@@ -127,6 +135,9 @@ def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
                 tpu = tpu_model(wname, sc, n)
                 tpuf = tpu_model(wname, sc, n, fuse="scheme")
                 results[(wname, sc, n)] = (cpu, tpu)
+                rows.append({"wavelet": wname, "scheme": sc, "size": n,
+                             "cpu_gbps": cpu, "tpu_model_gbps": tpu,
+                             "tpu_model_fused_gbps": tpuf, "steps": steps})
                 print(f"{wname},{sc},{n},{cpu:.2f},{tpu:.1f},{tpuf:.1f},"
                       f"{steps}")
     # the paper's headline check at the largest size
@@ -137,7 +148,7 @@ def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
         print(f"# {wname}: ns-conv/sep-conv TPU-model speedup = "
               f"{ns_conv[1] / sep_conv[1]:.2f}x "
               f"(paper: non-separable wins for CDF wavelets)")
-    return results
+    return rows
 
 
 if __name__ == "__main__":

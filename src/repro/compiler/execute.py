@@ -1,0 +1,116 @@
+"""Tap-program executors: trace-time walkers emitting jnp ops.
+
+Two interpretations of the same program:
+
+* :func:`run_window` — the Pallas in-kernel form: every shift is a static
+  slice of an already-loaded VMEM window.  A backward margin analysis
+  assigns each node the exact region its consumers need, so factored
+  stage-1 filters are computed once over (block + residual halo) and
+  every slice is static (the Mosaic-friendly pattern of the original
+  ``_apply_matrix_windows`` walk).
+
+* :func:`run_planes` — the jnp reference form: shifts are periodic
+  ``jnp.roll``s over whole (batched) planes.
+
+Both walk terms in program order with left-fold accumulation and the same
+strength reductions (``c == 1.0`` skips the multiply, ``c == -1.0``
+negates), so for identical inputs they produce identical values — and the
+lowered (pass-free) program reproduces the raw matrix walk bit for bit.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.compiler import ir
+
+
+def required_margins(prog: ir.TapProgram, out_margin: int
+                     ) -> List[Optional[Tuple[int, int]]]:
+    """Backward pass: the ``(gm, gn)`` margin each node is computed at so
+    the outputs land exactly at ``out_margin``.  ``None`` = never read."""
+    if out_margin < prog.halo:
+        raise ValueError(
+            f"window halo {out_margin} < program halo {prog.halo}")
+    fwd = prog.margins()
+    req: List[Optional[Tuple[int, int]]] = [None] * len(prog.nodes)
+    for o in prog.outputs:
+        req[o] = (out_margin, out_margin)
+    for i in range(len(prog.nodes) - 1, -1, -1):
+        r = req[i]
+        if r is None:
+            continue
+        assert r[0] >= fwd[i][0] and r[1] >= fwd[i][1], \
+            f"node {i}: margin {r} infeasible (needs {fwd[i]})"
+        for t in prog.nodes[i].terms:
+            cand = (r[0] - abs(t.km), r[1] - abs(t.kn))
+            prev = req[t.src]
+            req[t.src] = cand if prev is None else (min(prev[0], cand[0]),
+                                                    min(prev[1], cand[1]))
+    return req
+
+
+def _mac(acc, arr, c: float):
+    """One strength-reduced multiply-accumulate (exact for unit coeffs)."""
+    v = arr if c == 1.0 else (-arr if c == -1.0 else arr * c)
+    return v if acc is None else acc + v
+
+
+def run_window(prog: ir.TapProgram, xs: Sequence, out_margin: int):
+    """Execute over four equally-shaped windows; outputs shrink by
+    ``2*out_margin`` per axis (cf. ``_apply_steps_windows``)."""
+    H, W = xs[0].shape
+    req = required_margins(prog, out_margin)
+    vals: List[Optional[object]] = [None] * len(prog.nodes)
+    margins: List[Tuple[int, int]] = [(0, 0)] * len(prog.nodes)
+    for i, nd in enumerate(prog.nodes):
+        if nd.kind == "input":
+            vals[i] = xs[nd.j]
+            continue
+        r = req[i]
+        if r is None:
+            continue  # dead node (kept only for numbering)
+        qm, qn = r
+        oh, ow = H - 2 * qn, W - 2 * qm
+        acc = None
+        for t in nd.terms:
+            sm, sn = margins[t.src]
+            r0 = (qn - t.kn) - sn
+            c0 = (qm - t.km) - sm
+            acc = _mac(acc, vals[t.src][r0:r0 + oh, c0:c0 + ow], t.c)
+        vals[i] = acc if acc is not None \
+            else jnp.zeros((oh, ow), xs[0].dtype)
+        margins[i] = (qm, qn)
+    return [vals[o] for o in prog.outputs]
+
+
+def _shift(x, km: int, kn: int):
+    """Periodic shift: ``y[.., n, m] = x[.., n - kn, m - km]``."""
+    if kn:
+        x = jnp.roll(x, kn, axis=-2)
+    if km:
+        x = jnp.roll(x, km, axis=-1)
+    return x
+
+
+def run_planes(prog: ir.TapProgram, planes: Sequence):
+    """Execute over full (..., H, W) planes with periodic boundary."""
+    vals: List[Optional[object]] = [None] * len(prog.nodes)
+    for i, nd in enumerate(prog.nodes):
+        if nd.kind == "input":
+            vals[i] = planes[nd.j]
+            continue
+        acc = None
+        for t in nd.terms:
+            src = vals[t.src]
+            if src is None:
+                continue  # source of a dead subgraph
+            acc = _mac(acc, _shift(src, t.km, t.kn), t.c)
+        vals[i] = acc if acc is not None \
+            else (jnp.zeros_like(planes[0]) if nd.terms == () else None)
+    outs = []
+    for o in prog.outputs:
+        outs.append(vals[o] if vals[o] is not None
+                    else jnp.zeros_like(planes[0]))
+    return outs

@@ -52,39 +52,51 @@ __all__ = ["Pyramid", "dwt2", "idwt2", "flatten_pyramid",
 
 
 def _plan_for(shape, dtype, wavelet, levels, scheme, optimize, backend,
-              fuse, boundary):
+              fuse, boundary, compute_dtype, tap_opt):
     from repro import engine as E  # deferred: core <-> engine import cycle
     return E.get_plan(wavelet=wavelet, scheme=scheme, levels=levels,
                       shape=tuple(shape), dtype=str(dtype), backend=backend,
-                      optimize=optimize, fuse=fuse, boundary=boundary)
+                      optimize=optimize, fuse=fuse, boundary=boundary,
+                      compute_dtype=compute_dtype, tap_opt=tap_opt)
 
 
 def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
          scheme: str = "ns-polyconv", optimize: bool = False,
          backend: str = "jnp", fuse: str = "none",
-         boundary: str = "periodic") -> Pyramid:
+         boundary: str = "periodic", compute_dtype: str = "float32",
+         tap_opt: str = "full") -> Pyramid:
     """Multi-level forward 2-D DWT of a (batch of) image(s) (..., H, W).
 
     H and W must be divisible by 2**levels.  Dispatches through the
     plan-cache engine; see the module docstring for ``backend`` /
-    ``optimize`` / ``fuse`` / ``boundary``.
+    ``optimize`` / ``fuse`` / ``boundary``.  ``compute_dtype``
+    ("float32" or "bfloat16") sets the arithmetic dtype inside the
+    kernels — I/O stays in the input dtype.  ``tap_opt`` selects the
+    tap-program compiler level ("off" walks the raw polyphase matrices,
+    "exact" compiles without reassociation, "full" — the default —
+    applies fold/CSE/rank-1 and cuts the in-kernel MACs).  "exact" is
+    bit-identical to "off" on the ``pallas`` backend (both accumulate
+    term by term, cf. ``_apply_matrix_windows``); the jnp "off" walk
+    uses the legacy per-entry accumulation tree, so "exact" matches it
+    only to ulp-level rounding there.
     """
     x = jnp.asarray(x)
     plan = _plan_for(x.shape, x.dtype, wavelet, levels, scheme, optimize,
-                     backend, fuse, boundary)
+                     backend, fuse, boundary, compute_dtype, tap_opt)
     return plan.execute(x)
 
 
 def idwt2(pyr: Pyramid, wavelet: str = "cdf97",
           scheme: str = "ns-polyconv", optimize: bool = False,
           backend: str = "jnp", fuse: str = "none",
-          boundary: str = "periodic") -> jax.Array:
+          boundary: str = "periodic", compute_dtype: str = "float32",
+          tap_opt: str = "full") -> jax.Array:
     """Inverse of :func:`dwt2` (shares the forward transform's plan)."""
     ll = jnp.asarray(pyr.ll)
     levels = pyr.levels
     shape = ll.shape[:-2] + (ll.shape[-2] << levels, ll.shape[-1] << levels)
     plan = _plan_for(shape, ll.dtype, wavelet, levels, scheme, optimize,
-                     backend, fuse, boundary)
+                     backend, fuse, boundary, compute_dtype, tap_opt)
     return plan.execute_inverse(pyr)
 
 

@@ -73,12 +73,14 @@ def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
              levels: int = 1, shape: Tuple[int, ...], dtype: str = "float32",
              backend: str = "jnp", optimize: bool = False,
              fuse: str = "none", boundary: str = "periodic",
+             compute_dtype: str = "float32", tap_opt: str = "full",
              cache: Optional[PlanCache] = None) -> DwtPlan:
     """Fetch (or build) the plan for one transform configuration."""
     key = PlanKey(wavelet=wavelet, scheme=scheme, levels=int(levels),
                   shape=tuple(int(d) for d in shape), dtype=str(dtype),
                   backend=backend, optimize=bool(optimize), fuse=fuse,
-                  boundary=boundary)
+                  boundary=boundary, compute_dtype=str(compute_dtype),
+                  tap_opt=tap_opt)
     # explicit None check: an empty PlanCache is falsy (__len__ == 0)
     return (_GLOBAL if cache is None else cache).get(key)
 

@@ -20,9 +20,11 @@ import functools
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
+from repro.compiler import execute as CX
 
 
 def apply_steps_jnp(steps: Sequence[PP.StepSpec], planes: S.Planes
@@ -39,26 +41,50 @@ def apply_steps_jnp(steps: Sequence[PP.StepSpec], planes: S.Planes
     return planes
 
 
+def _run_programs_jnp(programs, planes, compute_dtype):
+    """Execute compiled tap programs on full planes (periodic rolls),
+    computing in ``compute_dtype`` and casting back to the I/O dtype."""
+    out_dtype = planes[0].dtype
+    cur = [p.astype(compute_dtype) for p in planes]
+    for prog in programs:
+        cur = CX.run_planes(prog, cur)
+    return tuple(p.astype(out_dtype) for p in cur)
+
+
 def _level_forward(x, spec, key):
     """One forward level: image (..., H, W) -> 4 planes (..., H/2, W/2)."""
     planes = S.to_planes(x)
+    cdt = jnp.dtype(key.compute_dtype)
     if key.backend == "pallas":
         return PP.apply_steps_pallas(
             spec.fwd_steps, planes,
             fuse=("scheme" if key.fuse in ("scheme", "levels") else "none"),
-            block=spec.block)
-    return apply_steps_jnp(spec.fwd_steps, planes)
+            block=spec.block, compute_dtype=cdt, tap_opt=key.tap_opt,
+            programs=spec.fwd_programs)
+    if spec.fwd_programs is not None:
+        return _run_programs_jnp(spec.fwd_programs, planes, cdt)
+    out_dtype = planes[0].dtype
+    planes = tuple(p.astype(cdt) for p in planes)
+    return tuple(p.astype(out_dtype)
+                 for p in apply_steps_jnp(spec.fwd_steps, planes))
 
 
 def _level_inverse(planes, spec, key):
     """One inverse level: 4 subband planes -> image (..., H, W)."""
+    cdt = jnp.dtype(key.compute_dtype)
     if key.backend == "pallas":
         planes = PP.apply_steps_pallas(
             spec.inv_steps, planes,
             fuse=("scheme" if key.fuse in ("scheme", "levels") else "none"),
-            block=spec.block)
+            block=spec.block, compute_dtype=cdt, tap_opt=key.tap_opt,
+            programs=spec.inv_programs)
+    elif spec.inv_programs is not None:
+        planes = _run_programs_jnp(spec.inv_programs, planes, cdt)
     else:
-        planes = apply_steps_jnp(spec.inv_steps, planes)
+        out_dtype = planes[0].dtype
+        planes = tuple(p.astype(cdt) for p in planes)
+        planes = tuple(p.astype(out_dtype)
+                       for p in apply_steps_jnp(spec.inv_steps, planes))
     return S.from_planes(planes)
 
 

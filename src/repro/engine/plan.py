@@ -40,14 +40,22 @@ from repro.engine.pyramid import Pyramid
 from repro.core import optimize as O
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
+from repro import compiler as C
 
 FUSE_MODES = ("none", "scheme", "levels")
 BOUNDARIES = ("periodic",)
+COMPUTE_DTYPES = ("float32", "bfloat16")
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
-    """Everything that determines a compiled execution plan."""
+    """Everything that determines a compiled execution plan.
+
+    ``compute_dtype`` is the in-kernel arithmetic dtype (I/O stays in the
+    array dtype); ``tap_opt`` is the tap-program compilation level
+    ("off" = raw matrix walk, "exact" = bit-preserving compilation,
+    "full" = fold + CSE + rank-1 factorization).
+    """
 
     wavelet: str
     scheme: str
@@ -58,6 +66,8 @@ class PlanKey:
     optimize: bool
     fuse: str
     boundary: str
+    compute_dtype: str = "float32"
+    tap_opt: str = "full"
 
 
 @functools.lru_cache(maxsize=512)
@@ -83,6 +93,10 @@ class LevelSpec:
     block: Tuple[int, int]            # resolved block edges (bh, bw)
     padded_shape: Tuple[int, int]     # plane dims padded to block multiples
     halo: int                         # halo pad per pallas_call (fuse-aware)
+    # compiled tap programs, one per kernel launch group under the plan's
+    # fuse mode (None when tap_opt == "off": the kernels walk raw matrices)
+    fwd_programs: Optional[Tuple[C.TapProgram, ...]] = None
+    inv_programs: Optional[Tuple[C.TapProgram, ...]] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +132,12 @@ class DwtPlan:
             return self.num_steps
         return len(self.level_specs)
 
+    def compiled_stats(self) -> Optional[dict]:
+        """Aggregate tap-program cost of the finest forward level (the hot
+        kernel), or None when ``tap_opt == "off"``."""
+        progs = self.level_specs[0].fwd_programs
+        return C.program_stats(progs) if progs is not None else None
+
     def execute(self, x: jax.Array) -> Pyramid:
         """Forward transform of ``x`` (shape must equal ``key.shape``)."""
         x = jnp.asarray(x)
@@ -143,13 +163,28 @@ def _resolve_level(index: int, h: int, w: int, key: PlanKey,
     hp, wp = h // 2, w // 2
     bh, hp2 = PP._pick_block(hp, block_target[0])
     bw, wp2 = PP._pick_block(wp, block_target[1])
-    if key.fuse == "none":
+    fwd_programs = inv_programs = None
+    if key.tap_opt != "off":
+        # fuse granularity of the *kernel launches*: one program per step
+        # (fuse="none") or one whole-chain program per level; the jnp
+        # backend has no launch granularity and always runs whole-chain.
+        pfuse = key.fuse if key.backend == "pallas" else "scheme"
+        fwd_programs = C.compile_scheme_programs(
+            key.wavelet, key.scheme, key.optimize, False, key.tap_opt,
+            pfuse)
+        inv_programs = C.compile_scheme_programs(
+            key.wavelet, key.scheme, False, True, key.tap_opt, pfuse)
+    if fwd_programs is not None:
+        # compiled per-axis margins: never larger than the matrix halos
+        halo = max(p.halo for p in fwd_programs)
+    elif key.fuse == "none":
         halo = max((st.halo for st in fwd), default=0)
     else:
         halo = sum(st.halo for st in fwd)
     return LevelSpec(index=index, image_shape=(h, w), plane_shape=(hp, wp),
                      fwd_steps=fwd, inv_steps=inv, block=(bh, bw),
-                     padded_shape=(hp2, wp2), halo=halo)
+                     padded_shape=(hp2, wp2), halo=halo,
+                     fwd_programs=fwd_programs, inv_programs=inv_programs)
 
 
 def build_plan(key: PlanKey,
@@ -163,6 +198,12 @@ def build_plan(key: PlanKey,
     if key.boundary not in BOUNDARIES:
         raise ValueError(f"unknown boundary {key.boundary!r}; "
                          f"available: {BOUNDARIES}")
+    if key.compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"unknown compute_dtype {key.compute_dtype!r}; "
+                         f"available: {COMPUTE_DTYPES}")
+    if key.tap_opt not in C.OPT_LEVELS:
+        raise ValueError(f"unknown tap_opt {key.tap_opt!r}; "
+                         f"available: {C.OPT_LEVELS}")
     if len(key.shape) < 2:
         raise ValueError(f"input must be (..., H, W), got {key.shape}")
     if key.levels < 1:

@@ -15,13 +15,20 @@ import jax
 from repro.core import schemes as S
 from repro.core import optimize as O
 from repro.kernels import polyphase as PP
+from repro import compiler as C
 
 SCHEME = "ns-lifting"
 
 
 def forward(x: jax.Array, wavelet: str = "cdf97", *, optimize: bool = False,
-            fuse: str = "none", block=(256, 512), interpret=None):
+            fuse: str = "none", block=(256, 512), interpret=None,
+            tap_opt: str = "full"):
     sch = (O.build_optimized(wavelet, SCHEME) if optimize
            else S.build_scheme(wavelet, SCHEME))
+    kfuse = "scheme" if fuse in ("scheme", "levels") else fuse
+    programs = (None if tap_opt == "off" else C.compile_scheme_programs(
+        wavelet, SCHEME, optimize, False, tap_opt, kfuse))
     return PP.apply_steps_pallas(PP.steps_of(sch), S.to_planes(x),
-                                 fuse=fuse, block=block, interpret=interpret)
+                                 fuse=kfuse, block=block,
+                                 interpret=interpret, tap_opt=tap_opt,
+                                 programs=programs)

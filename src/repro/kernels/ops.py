@@ -30,50 +30,80 @@ def _scheme_steps(wavelet: str, scheme: str, optimize: bool, inverse: bool):
 @functools.partial(
     jax.jit,
     static_argnames=("wavelet", "scheme", "optimize", "inverse", "fuse",
-                     "block", "interpret"))
+                     "block", "interpret", "compute_dtype", "tap_opt"))
 def apply_scheme_pallas(x, *, wavelet: str = "cdf97",
                         scheme: str = "ns-polyconv",
                         optimize: bool = False,
                         inverse: bool = False,
                         fuse: str = "none",
                         block: Tuple[int, int] = (256, 512),
-                        interpret: Optional[bool] = None):
+                        interpret: Optional[bool] = None,
+                        compute_dtype: str = "float32",
+                        tap_opt: str = "full"):
     """Single-level 2-D DWT step sequence on TPU via Pallas.
 
     Forward: ``x`` is a (batch of) image(s) (..., H, W) -> returns the
     (LL, HL, LH, HH) planes, each (..., H/2, W/2).
     Inverse: ``x`` is the 4-tuple of planes -> returns the image(s).
+
+    ``tap_opt`` picks the tap-program compilation level ("off" = raw
+    matrix walk); ``compute_dtype`` the in-kernel arithmetic dtype.
     """
+    from repro import compiler as C
+    cdt = jnp.dtype(compute_dtype)
+    kfuse = "scheme" if fuse in ("scheme", "levels") else "none"
+    programs = (None if tap_opt == "off" else
+                C.compile_scheme_programs(wavelet, scheme,
+                                          bool(optimize) and not inverse,
+                                          inverse, tap_opt, kfuse))
     if inverse:
         steps = _scheme_steps(wavelet, scheme, False, True)
-        out = PP.apply_steps_pallas(steps, tuple(x), fuse=fuse, block=block,
-                                    interpret=interpret)
+        out = PP.apply_steps_pallas(steps, tuple(x), fuse=kfuse,
+                                    block=block, interpret=interpret,
+                                    compute_dtype=cdt, tap_opt=tap_opt,
+                                    programs=programs)
         return S.from_planes(out)
     steps = _scheme_steps(wavelet, scheme, optimize, False)
     planes = S.to_planes(x)
-    return PP.apply_steps_pallas(steps, planes, fuse=fuse, block=block,
-                                 interpret=interpret)
+    return PP.apply_steps_pallas(steps, planes, fuse=kfuse, block=block,
+                                 interpret=interpret, compute_dtype=cdt,
+                                 tap_opt=tap_opt, programs=programs)
 
 
 def scheme_stats(wavelet: str, scheme: str, optimize: bool,
                  shape: Tuple[int, int], itemsize: int = 4,
-                 fuse: str = "none") -> dict:
-    """Step count / op count / ideal HBM bytes for the roofline model.
+                 fuse: str = "none", tap_opt: str = "full") -> dict:
+    """Step count / op counts / ideal HBM bytes for the roofline model.
 
-    ``fuse`` accepts the engine's level-granularity modes too:
-    "scheme" and "levels" both collapse one level to one pallas_call.
+    ``fuse`` accepts the engine's level-granularity modes too: "scheme"
+    and "levels" both collapse one level to one pallas_call.  ``ops`` is
+    the paper-convention raw matrix count; ``ops_compiled`` (and
+    ``macs_per_pixel``) come straight from the compiled tap program that
+    the kernels actually execute, so measured MACs/pixel are comparable
+    against the paper's operation-count tables.
     """
+    from repro import compiler as C
     sch = (O.build_optimized(wavelet, scheme) if optimize
            else S.build_scheme(wavelet, scheme))
     steps = PP.steps_of(sch)
     kfuse = "scheme" if fuse in ("scheme", "levels") else "none"
     calls = 1 if kfuse == "scheme" else len(steps)
-    return {
+    programs = (None if tap_opt == "off" else
+                C.compile_scheme_programs(wavelet, scheme, optimize, False,
+                                          tap_opt, kfuse))
+    out = {
         "wavelet": wavelet,
         "scheme": scheme + ("+opt" if optimize else ""),
         "fuse": fuse,
         "steps": len(steps),
         "pallas_calls": calls,
         "ops": sch.num_ops,
-        "hbm_bytes": PP.scheme_hbm_bytes(steps, shape, itemsize, fuse=kfuse),
+        "hbm_bytes": PP.scheme_hbm_bytes(steps, shape, itemsize, fuse=kfuse,
+                                         programs=programs),
     }
+    if programs is not None:
+        cst = C.program_stats(programs)
+        out["ops_compiled"] = cst["macs"]
+        out["macs_per_pixel"] = cst["macs_per_pixel"]
+        out["halo_compiled"] = cst["halo"]
+    return out

@@ -37,6 +37,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import poly as P
 from repro.core import optimize as O
 from repro.core import schemes as S
+from repro import compiler as C
+from repro.compiler import execute as CX
 
 # CPU containers run kernels through the interpreter; on real TPUs this
 # resolves to False and the Mosaic pipeline compiles the kernel.
@@ -151,15 +153,22 @@ def _periodic_pad(p: jax.Array, r: int, hp2: int, wp2: int) -> jax.Array:
 
 def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
                        block: Tuple[int, int], interpret: Optional[bool],
-                       compute_dtype=jnp.float32):
+                       compute_dtype=jnp.float32,
+                       program: Optional[C.TapProgram] = None):
     """One pallas_call executing ``steps`` (fused) over the four planes.
 
     ``planes`` are batched ``(B, hp, wp)``; the batch is the leading grid
     dimension, so one call covers the whole batch with no vmap round trip.
+
+    With a compiled ``program`` the kernel body executes the tap program
+    (fewer MACs, and a halo from the program's per-axis margin analysis —
+    never larger than the summed step halos); without one it walks the
+    raw matrices, which is the compiler's bit-identity reference.
     """
     if interpret is None:
         interpret = _default_interpret()
-    r_total = sum(st.halo for st in steps)
+    r_total = program.halo if program is not None \
+        else sum(st.halo for st in steps)
     nb, hp, wp = planes[0].shape
     bh, hp2 = _pick_block(hp, block[0])
     bw, wp2 = _pick_block(wp, block[1])
@@ -190,7 +199,10 @@ def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
         for cp in copies:
             cp.wait()
         xs = [s[:, :].astype(compute_dtype) for s in scratch]
-        ys = _apply_steps_windows(steps, xs)
+        if program is not None:
+            ys = CX.run_window(program, xs, r_total)
+        else:
+            ys = _apply_steps_windows(steps, xs)
         for k in range(4):
             o_refs[k][0, :, :] = ys[k].astype(out_dtype)
 
@@ -215,7 +227,9 @@ def apply_steps_pallas(steps: Sequence[StepSpec], planes, *,
                        fuse: str = "none",
                        block: Tuple[int, int] = (256, 512),
                        interpret: Optional[bool] = None,
-                       compute_dtype=jnp.float32):
+                       compute_dtype=jnp.float32,
+                       tap_opt: str = "full",
+                       programs: Optional[Tuple[C.TapProgram, ...]] = None):
     """Execute a scheme's steps on the four polyphase planes.
 
     ``planes`` may carry arbitrary leading batch dims ``(..., hp, wp)``;
@@ -225,22 +239,38 @@ def apply_steps_pallas(steps: Sequence[StepSpec], planes, *,
                     step; the step count is the paper's barrier count.
     fuse="scheme" — beyond-paper: a single pallas_call with compound halo
                     (overlapped-tile recompute).
+
+    ``tap_opt`` selects the tap-program compilation level ("off" walks the
+    raw matrices — the seed behaviour and the compiler's bit-identity
+    reference; "exact" compiles without reassociation; "full" applies all
+    passes).  Pre-compiled ``programs`` (one per pallas_call under the
+    chosen fuse mode, e.g. from a :class:`repro.engine.plan.DwtPlan`)
+    skip recompilation.
     """
     steps = tuple(steps)
     if fuse not in ("none", "scheme"):
         raise ValueError(f"unknown fuse mode {fuse!r}")
+    if programs is None and tap_opt != "off":
+        if fuse == "scheme":
+            programs = (C.compile_steps(steps, tap_opt),)
+        else:
+            programs = tuple(C.compile_steps((st,), tap_opt)
+                             for st in steps)
     planes = tuple(jnp.asarray(p) for p in planes)
     batch = planes[0].shape[:-2]
     p3 = [p.reshape((-1,) + p.shape[-2:]) for p in planes]
     if fuse == "scheme":
         p3 = _steps_pallas_call(steps, p3, block=block,
                                 interpret=interpret,
-                                compute_dtype=compute_dtype)
+                                compute_dtype=compute_dtype,
+                                program=programs[0] if programs else None)
     else:
-        for st in steps:
+        for i, st in enumerate(steps):
             p3 = _steps_pallas_call((st,), p3, block=block,
                                     interpret=interpret,
-                                    compute_dtype=compute_dtype)
+                                    compute_dtype=compute_dtype,
+                                    program=programs[i] if programs
+                                    else None)
     return tuple(p.reshape(batch + p.shape[-2:]) for p in p3)
 
 
@@ -250,23 +280,43 @@ def apply_steps_pallas(steps: Sequence[StepSpec], planes, *,
 
 def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
                      itemsize: int, fuse: str = "none",
-                     block: Tuple[int, int] = (256, 512)) -> int:
+                     block: Tuple[int, int] = (256, 512),
+                     programs: Optional[Sequence] = None) -> int:
     """Ideal HBM bytes moved by the kernel sequence on a (H, W) image.
 
     Per pallas_call: read 4 planes (block+halo windows, overlap counted)
-    + write 4 planes.  The wrap padding copy is excluded — production
-    kernels fold it into wrapped corner DMAs; it is identical across
-    schemes and does not change the comparison.
+    + write 4 planes.  When ``_pick_block`` pads a non-smooth plane dim,
+    each call really writes the padded ``hp2 x wp2`` planes and the
+    caller pads the inputs (one extra read+write of every plane) and
+    slices the outputs back (another read+write): that traffic is
+    counted, so the roofline model matches what the kernel actually
+    moves.  The halo-only wrap copy on *unpadded* planes is still
+    excluded — production kernels fold it into wrapped corner DMAs; it
+    is identical across schemes and does not change the comparison.
+
+    ``programs`` (one compiled tap program per call group) narrows the
+    halo to the compiled per-axis margin when available.
     """
     h, w = shape
     hp, wp = h // 2, w // 2
     bh, hp2 = _pick_block(hp, block[0])
     bw, wp2 = _pick_block(wp, block[1])
+    padded = (hp2, wp2) != (hp, wp)
     total = 0
     groups = [steps] if fuse == "scheme" else [[st] for st in steps]
-    for g in groups:
-        r = sum(st.halo for st in g)
+    for gi, g in enumerate(groups):
+        if programs is not None:
+            r = programs[gi].halo
+        else:
+            r = sum(st.halo for st in g)
         read = 4 * (hp2 // bh) * (wp2 // bw) * (bh + 2 * r) * (bw + 2 * r)
         write = 4 * hp2 * wp2
+        if padded:
+            # _periodic_pad materializes (hp2+2r) x (wp2+2r) planes ...
+            read += 4 * hp * wp
+            write += 4 * (hp2 + 2 * r) * (wp2 + 2 * r)
+            # ... and the padded outputs are sliced back to hp x wp
+            read += 4 * hp2 * wp2
+            write += 4 * hp * wp
         total += (read + write) * itemsize
     return total
