@@ -59,6 +59,10 @@ def main() -> None:
         reps=3 if quick else 5)
 
     print("=" * 72)
+    doc["tiling"] = throughput.tiled_throughput(
+        n=256 if quick else 512, tile=64 if quick else 128)
+
+    print("=" * 72)
     from benchmarks import kernel_bench
     doc["kernels"] = kernel_bench.main()
 
@@ -72,6 +76,23 @@ def main() -> None:
         roofline.main()
     except Exception as e:  # artifacts may not exist yet
         print(f"# roofline artifacts not available: {e}")
+
+    print("=" * 72)
+    from repro import engine
+    stats = engine.stats()
+    doc["engine_stats"] = stats
+    cache = stats["plan_cache"]
+    print(f"# engine stats: plan cache {cache['hits']} hits / "
+          f"{cache['misses']} misses, {cache['size']} plans resident")
+    for row in stats["plans"]:
+        tiling = (f" tiles={row['tile_grid']}x{row['tiles']} "
+                  f"margin={row['halo_margin']}" if "tiles" in row else "")
+        macs = (f" macs={row['compiled_macs']}" if "compiled_macs" in row
+                else "")
+        print(f"#   {row['wavelet']}/{row['scheme']} L{row['levels']} "
+              f"{row['shape']} {row['backend']}/{row['fuse']}"
+              f"/{row['tap_opt']} steps={row['num_steps']}"
+              f" launches={row['pallas_calls']}{macs}{tiling}")
 
     print("=" * 72)
     doc["elapsed_s"] = time.time() - t0

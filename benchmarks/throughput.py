@@ -121,6 +121,36 @@ def engine_throughput(batch_sizes=(1, 8, 32), n: int = 128,
     return {"speedup": t_loop / t_eng, "rows": rows}
 
 
+def tiled_throughput(n: int = 512, levels: int = 3, tile: int = 128,
+                     wavelet: str = "cdf97", scheme: str = "ns-polyconv",
+                     reps: int = 3):
+    """Tiled vs monolithic wall clock, plus the streaming executor:
+    images/sec through ``dwt2(..., tiles=...)`` and ``stream_dwt2`` on an
+    n x n image (CPU numbers; on device the tiled path is what unlocks
+    planes past single-kernel/single-device limits)."""
+    from repro.tiling import stream_dwt2
+    print(f"# tiling: {n}x{n}, {levels} levels, tile {tile}x{tile} "
+          f"({wavelet}/{scheme})")
+    print("path,img_per_s")
+    rng = np.random.default_rng(0)
+    xh = rng.standard_normal((n, n)).astype(np.float32)
+    x = jnp.asarray(xh)
+    rows = []
+    t_mono = _time(lambda: T.dwt2(x, wavelet=wavelet, levels=levels,
+                                  scheme=scheme, fuse="levels"), reps)
+    t_tile = _time(lambda: T.dwt2(x, wavelet=wavelet, levels=levels,
+                                  scheme=scheme, fuse="levels",
+                                  tiles=(tile, tile)), reps)
+    t_stream = _time(lambda: stream_dwt2(xh, wavelet=wavelet, levels=levels,
+                                         scheme=scheme,
+                                         tiles=(tile, tile)), reps)
+    for path, t in (("monolithic", t_mono), ("tiled-gather", t_tile),
+                    ("streaming", t_stream)):
+        rows.append({"path": path, "img_per_s": 1.0 / t})
+        print(f"{path},{1.0 / t:.2f}")
+    return rows
+
+
 def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
     print("# Figures 7/8/9 analogue: GB/s per scheme vs image size")
     print("wavelet,scheme,size,cpu_measured_GBps,tpu_model_GBps,"

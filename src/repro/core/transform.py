@@ -12,7 +12,8 @@ Both functions are thin wrappers over the plan/executor engine
 (:mod:`repro.engine`): every call resolves a :class:`repro.engine.DwtPlan`
 from the LRU plan cache keyed on
 ``(wavelet, scheme, levels, shape, dtype, backend, optimize, fuse,
-boundary)`` — the scheme algebra, per-level step sequences, block shapes
+boundary, compute_dtype, tap_opt, tiles)`` — the scheme algebra,
+per-level step sequences, block shapes
 and halo pads are computed once per key and reused across calls.  Input
 may be batched ``(..., H, W)`` on both backends; batches run in a single
 kernel launch per barrier (a leading grid dimension on the Pallas path).
@@ -52,19 +53,20 @@ __all__ = ["Pyramid", "dwt2", "idwt2", "flatten_pyramid",
 
 
 def _plan_for(shape, dtype, wavelet, levels, scheme, optimize, backend,
-              fuse, boundary, compute_dtype, tap_opt):
+              fuse, boundary, compute_dtype, tap_opt, tiles=None):
     from repro import engine as E  # deferred: core <-> engine import cycle
     return E.get_plan(wavelet=wavelet, scheme=scheme, levels=levels,
                       shape=tuple(shape), dtype=str(dtype), backend=backend,
                       optimize=optimize, fuse=fuse, boundary=boundary,
-                      compute_dtype=compute_dtype, tap_opt=tap_opt)
+                      compute_dtype=compute_dtype, tap_opt=tap_opt,
+                      tiles=tiles)
 
 
 def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
          scheme: str = "ns-polyconv", optimize: bool = False,
          backend: str = "jnp", fuse: str = "none",
          boundary: str = "periodic", compute_dtype: str = "float32",
-         tap_opt: str = "full") -> Pyramid:
+         tap_opt: str = "full", tiles=None) -> Pyramid:
     """Multi-level forward 2-D DWT of a (batch of) image(s) (..., H, W).
 
     H and W must be divisible by 2**levels.  Dispatches through the
@@ -78,11 +80,15 @@ def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
     bit-identical to "off" on the ``pallas`` backend (both accumulate
     term by term, cf. ``_apply_matrix_windows``); the jnp "off" walk
     uses the legacy per-entry accumulation tree, so "exact" matches it
-    only to ulp-level rounding there.
+    only to ulp-level rounding there.  ``tiles`` (a ``(tile_h, tile_w)``
+    pair, or None) runs the transform over a grid of halo-padded tiles
+    instead of one monolithic plane — same coefficients (bit-identical
+    at ``tap_opt`` "off"/"exact"), tiled execution; see
+    :mod:`repro.tiling`.
     """
     x = jnp.asarray(x)
     plan = _plan_for(x.shape, x.dtype, wavelet, levels, scheme, optimize,
-                     backend, fuse, boundary, compute_dtype, tap_opt)
+                     backend, fuse, boundary, compute_dtype, tap_opt, tiles)
     return plan.execute(x)
 
 
@@ -90,13 +96,13 @@ def idwt2(pyr: Pyramid, wavelet: str = "cdf97",
           scheme: str = "ns-polyconv", optimize: bool = False,
           backend: str = "jnp", fuse: str = "none",
           boundary: str = "periodic", compute_dtype: str = "float32",
-          tap_opt: str = "full") -> jax.Array:
+          tap_opt: str = "full", tiles=None) -> jax.Array:
     """Inverse of :func:`dwt2` (shares the forward transform's plan)."""
     ll = jnp.asarray(pyr.ll)
     levels = pyr.levels
     shape = ll.shape[:-2] + (ll.shape[-2] << levels, ll.shape[-1] << levels)
     plan = _plan_for(shape, ll.dtype, wavelet, levels, scheme, optimize,
-                     backend, fuse, boundary, compute_dtype, tap_opt)
+                     backend, fuse, boundary, compute_dtype, tap_opt, tiles)
     return plan.execute_inverse(pyr)
 
 

@@ -63,6 +63,21 @@ def shard_map(f, mesh: Mesh, in_specs, out_specs, manual_axes=None):
                       check_rep=False, auto=auto)
 
 
+def make_tile_mesh(rows: int, cols: int,
+                   axes: Tuple[str, str] = ("tr", "tc")) -> Mesh:
+    """2-D device mesh for the tiling subsystem's shard_map transport:
+    one tile per device, mesh axes sized like the tile grid (see
+    :mod:`repro.tiling.exchange`)."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < rows * cols:
+        raise ValueError(
+            f"tile mesh {rows}x{cols} needs {rows * cols} devices, "
+            f"have {len(devs)}")
+    arr = np.asarray(devs[:rows * cols]).reshape(rows, cols)
+    return Mesh(arr, axes)
+
+
 def _axis_size(mesh: Mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 

@@ -6,12 +6,12 @@ Pallas backends).  ``repro.core.transform.dwt2`` / ``idwt2`` are thin
 wrappers over this package.
 """
 from repro.engine.cache import (PlanCache, clear_plan_cache, get_plan,
-                                global_cache, plan_cache_stats)
+                                global_cache, plan_cache_stats, stats)
 from repro.engine.plan import (DwtPlan, LevelSpec, PlanKey, Pyramid,
                                build_plan, scheme_steps)
 
 __all__ = [
     "DwtPlan", "LevelSpec", "PlanKey", "Pyramid", "build_plan",
     "scheme_steps", "PlanCache", "get_plan", "global_cache",
-    "plan_cache_stats", "clear_plan_cache",
+    "plan_cache_stats", "clear_plan_cache", "stats",
 ]

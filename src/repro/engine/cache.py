@@ -74,13 +74,16 @@ def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
              backend: str = "jnp", optimize: bool = False,
              fuse: str = "none", boundary: str = "periodic",
              compute_dtype: str = "float32", tap_opt: str = "full",
+             tiles: Optional[Tuple[int, int]] = None,
              cache: Optional[PlanCache] = None) -> DwtPlan:
     """Fetch (or build) the plan for one transform configuration."""
     key = PlanKey(wavelet=wavelet, scheme=scheme, levels=int(levels),
                   shape=tuple(int(d) for d in shape), dtype=str(dtype),
                   backend=backend, optimize=bool(optimize), fuse=fuse,
                   boundary=boundary, compute_dtype=str(compute_dtype),
-                  tap_opt=tap_opt)
+                  tap_opt=tap_opt,
+                  tiles=(None if tiles is None
+                         else (int(tiles[0]), int(tiles[1]))))
     # explicit None check: an empty PlanCache is falsy (__len__ == 0)
     return (_GLOBAL if cache is None else cache).get(key)
 
@@ -91,3 +94,32 @@ def plan_cache_stats() -> dict:
 
 def clear_plan_cache() -> None:
     _GLOBAL.clear()
+
+
+def stats() -> dict:
+    """Engine-wide observability summary: plan-cache hit/miss counters
+    plus one row per cached plan (steps, kernel launches, compiled
+    tap-program op counts, tile counts) — what benchmarks and production
+    dashboards need to see at a glance."""
+    with _GLOBAL._lock:
+        items = list(_GLOBAL._plans.items())
+    plans = []
+    for key, plan in items:
+        row = {"wavelet": key.wavelet, "scheme": key.scheme,
+               "levels": key.levels, "shape": key.shape,
+               "backend": key.backend, "fuse": key.fuse,
+               "optimize": key.optimize, "tap_opt": key.tap_opt,
+               "num_steps": plan.num_steps,
+               "pallas_calls": plan.pallas_calls}
+        compiled = plan.compiled_stats()
+        if compiled is not None:
+            row["compiled_macs"] = compiled["macs"]
+            row["compiled_nodes"] = compiled["nodes"]
+            row["compiled_halo"] = compiled["halo"]
+        if plan.grid is not None:
+            row["tiles"] = key.tiles
+            row["tile_count"] = plan.tile_count
+            row["tile_grid"] = plan.grid.grid_shape
+            row["halo_margin"] = plan.grid.margin
+        plans.append(row)
+    return {"plan_cache": _GLOBAL.stats(), "plans": plans}

@@ -68,6 +68,30 @@ class PlanKey:
     boundary: str
     compute_dtype: str = "float32"
     tap_opt: str = "full"
+    # (tile_h, tile_w) core size for tiled execution, or None (monolithic).
+    # Part of the key so tiled plans cache exactly like monolithic ones.
+    tiles: Optional[Tuple[int, int]] = None
+
+
+def max_feasible_levels(h: int, w: int) -> int:
+    """Largest pyramid depth for an (h, w) image: both dims must stay
+    divisible by 2 at every level (min trailing-zero count)."""
+    def tz(n: int) -> int:
+        return (n & -n).bit_length() - 1 if n > 0 else 0
+    return min(tz(h), tz(w))
+
+
+def validate_image_geometry(h: int, w: int, levels: int) -> None:
+    """Check image dims against ``levels`` with an actionable error that
+    names the offending dimension and the max feasible levels, instead
+    of failing deep inside kernel tracing."""
+    div = 1 << levels
+    for name, n in (("H", h), ("W", w)):
+        if n % div:
+            raise ValueError(
+                f"levels={levels} infeasible for image {h}x{w}: {name}={n} "
+                f"is not divisible by 2^levels={div}; max feasible levels "
+                f"for this image is {max_feasible_levels(h, w)}")
 
 
 @functools.lru_cache(maxsize=512)
@@ -113,6 +137,8 @@ class DwtPlan:
     level_specs: Tuple[LevelSpec, ...]
     _forward: Optional[object] = None   # set by the executor module
     _inverse: Optional[object] = None
+    # TileGrid when key.tiles is set (executors then come from repro.tiling)
+    grid: Optional[object] = None
 
     @property
     def num_steps(self) -> int:
@@ -131,6 +157,11 @@ class DwtPlan:
         if self.key.fuse == "none":
             return self.num_steps
         return len(self.level_specs)
+
+    @property
+    def tile_count(self) -> Optional[int]:
+        """Tiles per execution (None for monolithic plans)."""
+        return self.grid.count if self.grid is not None else None
 
     def compiled_stats(self) -> Optional[dict]:
         """Aggregate tap-program cost of the finest forward level (the hot
@@ -209,9 +240,7 @@ def build_plan(key: PlanKey,
     if key.levels < 1:
         raise ValueError(f"levels must be >= 1, got {key.levels}")
     h, w = key.shape[-2], key.shape[-1]
-    if h % (1 << key.levels) or w % (1 << key.levels):
-        raise ValueError(
-            f"image {h}x{w} not divisible by 2^levels={1 << key.levels}")
+    validate_image_geometry(h, w, key.levels)
 
     fwd = scheme_steps(key.wavelet, key.scheme, key.optimize, False)
     inv = scheme_steps(key.wavelet, key.scheme, False, True)
@@ -220,6 +249,28 @@ def build_plan(key: PlanKey,
         specs.append(_resolve_level(lvl, h >> lvl, w >> lvl, key, fwd, inv,
                                     block_target))
     plan = DwtPlan(key=key, level_specs=tuple(specs))
+
+    if key.tiles is not None:
+        # deferred: tiling sits above the engine and imports it back
+        from repro.tiling import api as TA
+        from repro.tiling import grid as TG
+        plan.grid = TG.build_grid((h, w), key.tiles, key.levels, specs)
+
+        def _lazy(make):
+            # tiled executors build on first use: a plan fetched only for
+            # its grid geometry (e.g. stream_dwt2, the shard_map
+            # transport) never builds the gather window plans behind them
+            slot = []
+
+            def call(*args):
+                if not slot:
+                    slot.append(make(plan))
+                return slot[0](*args)
+            return call
+
+        plan._forward = _lazy(TA.make_tiled_forward)
+        plan._inverse = _lazy(TA.make_tiled_inverse)
+        return plan
 
     from repro.engine import executor as E
     plan._forward = E.make_forward(plan)

@@ -1,0 +1,152 @@
+"""Halo exchange: materialize ``core + halo`` tile windows, two transports.
+
+* **gather** (intra-device) — the whole image (or subband plane) is
+  resident on one device; tile windows are one mod-indexed gather
+  (``x[..., ri % H, ci % W]``), which realizes periodic boundary
+  semantics and the halo overlap in a single op.  Windows stack into a
+  tile axis, so the whole grid runs through the engine as one batched
+  plan execution (tiles ride the kernels' leading grid dimension).
+
+* **shard_map** (cross-device) — the image lives sharded over a 2-D
+  device mesh, one tile block per device; halos move by neighbor
+  exchange: ``jax.lax.ppermute`` edge strips along the row axis, then
+  column strips of the row-padded block (corners arrive transitively).
+  The cyclic permutation *is* the periodic boundary — edge tiles receive
+  their wrap-around halo from the opposite side of the mesh.
+
+Both transports produce samplewise-identical windows; everything
+downstream (the per-window transform, core extraction, stitching) is
+transport-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tiling.grid import TileGrid
+
+
+def window_indices(n_tiles: int, core: int, margin: int, period: int
+                   ) -> np.ndarray:
+    """(n_tiles, core + 2*margin) periodic sample indices along one axis:
+    tile ``i`` covers ``[i*core - margin, (i+1)*core + margin) mod period``
+    (the last tile may overhang; the wrap makes that valid, not garbage).
+    """
+    base = np.arange(-margin, core + margin)
+    return (base[None, :] + core * np.arange(n_tiles)[:, None]) % period
+
+
+def gather_windows(x: jax.Array, grid: TileGrid) -> jax.Array:
+    """Tile windows of an image ``(..., H, W)`` -> ``(..., T, wh, ww)``."""
+    (h, w), (th, tw) = grid.image_shape, grid.tile
+    nr, nc = grid.grid_shape
+    ri = window_indices(nr, th, grid.margin, h)
+    ci = window_indices(nc, tw, grid.margin, w)
+    wins = x[..., ri[:, None, :, None], ci[None, :, None, :]]
+    return wins.reshape(*wins.shape[:-4], nr * nc, ri.shape[1], ci.shape[1])
+
+
+def gather_plane_windows(p: jax.Array, grid: TileGrid, level: int
+                         ) -> jax.Array:
+    """Subband-plane windows for the inverse: plane ``(..., H_l, W_l)`` at
+    pyramid level ``level`` (0 = finest) -> ``(..., T, ph, pw)`` with the
+    inverse margin scaled to that level's resolution."""
+    f = 1 << (level + 1)
+    (h, w), (th, tw) = grid.image_shape, grid.tile
+    nr, nc = grid.grid_shape
+    ri = window_indices(nr, th // f, grid.inv_margin // f, h // f)
+    ci = window_indices(nc, tw // f, grid.inv_margin // f, w // f)
+    wins = p[..., ri[:, None, :, None], ci[None, :, None, :]]
+    return wins.reshape(*wins.shape[:-4], nr * nc, ri.shape[1], ci.shape[1])
+
+
+def extract_core(t: jax.Array, grid: TileGrid, level: int) -> jax.Array:
+    """Slice the exact core out of window-pyramid planes ``(..., ph, pw)``
+    at pyramid ``level`` (any leading batch/tile axes)."""
+    rs, cs = grid.core_slice(level)
+    return t[..., rs, cs]
+
+
+def _assemble(cores: jax.Array, grid: TileGrid, out: Tuple[int, int]
+              ) -> jax.Array:
+    """Lay per-tile cores ``(..., T, ch, cw)`` out on the grid and clip
+    the last-row/col overhang to the global ``out`` shape."""
+    nr, nc = grid.grid_shape
+    ch, cw = cores.shape[-2:]
+    cores = cores.reshape(*cores.shape[:-3], nr, nc, ch, cw)
+    cores = jnp.swapaxes(cores, -3, -2)
+    full = cores.reshape(*cores.shape[:-4], nr * ch, nc * cw)
+    return full[..., :out[0], :out[1]]
+
+
+def stitch_plane(tiles: jax.Array, grid: TileGrid, level: int,
+                 inverse: bool = False) -> jax.Array:
+    """Stitch window-pyramid planes at ``level`` (0 = finest) back into
+    the global subband plane; ``inverse=True`` stitches reconstructed
+    *image* tiles (level ignored, margins in image pixels)."""
+    (h, w), (th, tw) = grid.image_shape, grid.tile
+    if inverse:
+        m = grid.inv_margin
+        return _assemble(tiles[..., m:m + th, m:m + tw], grid, (h, w))
+    f = 1 << (level + 1)
+    return _assemble(extract_core(tiles, grid, level), grid,
+                     (h // f, w // f))
+
+
+# ---------------------------------------------------------------------------
+# Cross-device transport: ppermute neighbor exchange inside shard_map
+# ---------------------------------------------------------------------------
+
+def shard_halo_pad(block: jax.Array, margin: int, row_axis: str,
+                   col_axis: str, grid_shape: Tuple[int, int]) -> jax.Array:
+    """Pad one device's tile block with its neighbors' halos (call inside
+    ``shard_map``): edge strips ppermute cyclically along the mesh row
+    axis, then column strips of the row-padded block (corner halos ride
+    along).  The cyclic perm realizes the periodic boundary.
+
+    Single-hop exchange: ``margin`` must not exceed the block edge (the
+    grid planner enforces this before dispatching to this transport).
+    """
+    nr, nc = grid_shape
+    m = margin
+    if m == 0:
+        return block
+    down = [(i, (i + 1) % nr) for i in range(nr)]
+    up = [(i, (i - 1) % nr) for i in range(nr)]
+    top = jax.lax.ppermute(block[..., -m:, :], row_axis, down)
+    bot = jax.lax.ppermute(block[..., :m, :], row_axis, up)
+    block = jnp.concatenate([top, block, bot], axis=-2)
+    right = [(j, (j + 1) % nc) for j in range(nc)]
+    left = [(j, (j - 1) % nc) for j in range(nc)]
+    lft = jax.lax.ppermute(block[..., :, -m:], col_axis, right)
+    rgt = jax.lax.ppermute(block[..., :, :m], col_axis, left)
+    return jnp.concatenate([lft, block, rgt], axis=-1)
+
+
+def validate_shard_grid(grid: TileGrid, mesh, axes: Tuple[str, str],
+                        inverse: bool = False) -> None:
+    """Shard_map transport preconditions: the grid divides the image
+    evenly (equal shards), the mesh axes match the grid, and every
+    exchange is single-hop (margin <= tile edge at every level)."""
+    (h, w), (th, tw) = grid.image_shape, grid.tile
+    nr, nc = grid.grid_shape
+    if h % th or w % tw:
+        raise ValueError(
+            f"shard_map transport needs an evenly-dividing grid; tile "
+            f"{th}x{tw} does not divide image {h}x{w} (use the gather "
+            f"transport or an evenly-dividing tile size)")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, want in zip(axes, (nr, nc)):
+        if sizes.get(name) != want:
+            raise ValueError(
+                f"mesh axis {name!r} has size {sizes.get(name)}, but the "
+                f"tile grid is {nr}x{nc}; build the mesh to match the grid")
+    m = grid.inv_margin if inverse else grid.margin
+    if m > min(th, tw):
+        raise ValueError(
+            f"halo margin {m} exceeds tile edge {min(th, tw)}: neighbor "
+            f"exchange is single-hop; use larger tiles (or the gather "
+            f"transport)")

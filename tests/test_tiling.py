@@ -1,0 +1,358 @@
+"""Tiled & streaming DWT subsystem.
+
+Covers the subsystem's acceptance criteria:
+
+* tiled == monolithic, **bit-identical** on the jnp path for all six
+  schemes at every ``tap_opt`` level, on odd/prime-factor shapes, with
+  tile sizes that do not divide the image evenly;
+* the same equality through the Pallas kernels to fp32 tolerance (XLA's
+  elementwise codegen is shape-dependent — FMA contraction — so bitwise
+  comparison across different plane shapes is not defined there; a
+  dedicated eager-mode test pins down that the tiling *math* is exact);
+* exact halo-margin derivation from the compiled tap programs,
+  propagated across levels;
+* the shard_map transport (one tile per device, ppermute halo exchange)
+  against the gather transport, subprocess-isolated on 4 fake devices;
+* the streaming executor on an out-of-core (memmapped) image larger
+  than any single-launch plane in this suite, bit-identical to the
+  monolithic transform;
+* geometry validation errors that name the offending dimension and the
+  max feasible levels;
+* ``repro.engine.stats()`` observability.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import engine as E
+from repro.core import transform as T
+from repro.core.schemes import SCHEMES
+from repro.tiling import (TileGrid, dwt2_tiled, idwt2_tiled,
+                          pyramid_margin, stream_dwt2, validate_geometry)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _flat(pyr):
+    return [pyr.ll] + [s for det in pyr.details for s in det]
+
+
+def _assert_pyr_equal(a, b, exact=True, **tol):
+    for pa, pb in zip(_flat(a), _flat(b)):
+        assert pa.shape == pb.shape
+        if exact:
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+        else:
+            np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                       **tol)
+
+
+# ---------------------------------------------------------------------------
+# Bit-equality vs the monolithic transform (jnp path: eager, deterministic)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("tap_opt", ("off", "exact", "full"))
+def test_tiled_bit_identical_jnp(scheme, tap_opt):
+    """All 6 schemes x all tap_opt levels, odd/prime plane factors
+    (116 = 4*29, 124 = 4*31) and a non-dividing 48x48 tile."""
+    x = _rand((116, 124), seed=1)
+    kw = dict(wavelet="cdf97", levels=2, scheme=scheme, tap_opt=tap_opt)
+    mono = T.dwt2(x, **kw)
+    tiled = T.dwt2(x, tiles=(48, 48), **kw)
+    _assert_pyr_equal(mono, tiled, exact=True)
+    # inverse: tile-by-tile reconstruction of the monolithic pyramid
+    xm = T.idwt2(mono, wavelet="cdf97", scheme=scheme, tap_opt=tap_opt)
+    xt = T.idwt2(mono, wavelet="cdf97", scheme=scheme, tap_opt=tap_opt,
+                 tiles=(48, 48))
+    np.testing.assert_array_equal(np.asarray(xm), np.asarray(xt))
+
+
+@pytest.mark.parametrize("tiles", ((16, 16), (32, 48), (48, 16)))
+def test_tiled_bit_identical_tile_sizes(tiles):
+    """Dividing and non-dividing tile shapes, deeper pyramid, dd137
+    (the widest halo of the three wavelets)."""
+    x = _rand((96, 112), seed=2)
+    kw = dict(wavelet="dd137", levels=3, scheme="ns-polyconv")
+    mono = T.dwt2(x, **kw)
+    tiled = T.dwt2(x, tiles=tiles, **kw)
+    _assert_pyr_equal(mono, tiled, exact=True)
+
+
+def test_tiled_batched_and_optimized():
+    """Batched (B, C, H, W) input and the Section-5 optimized split both
+    ride through the tiled path unchanged."""
+    x = _rand((2, 3, 64, 64), seed=3)
+    kw = dict(wavelet="cdf97", levels=2, scheme="sep-lifting", optimize=True)
+    mono = T.dwt2(x, **kw)
+    tiled = T.dwt2(x, tiles=(32, 32), **kw)
+    _assert_pyr_equal(mono, tiled, exact=True)
+    xr = T.idwt2(tiled, wavelet="cdf97", scheme="sep-lifting",
+                 tiles=(32, 32))
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("scheme", ("ns-polyconv", "sep-lifting"))
+@pytest.mark.parametrize("tap_opt", ("exact", "full"))
+def test_tiled_pallas_parity(scheme, tap_opt):
+    """Pallas (interpret on CPU): tiled == monolithic to fp32 tolerance.
+    Bitwise equality is not defined across plane shapes under XLA (its
+    elementwise codegen contracts mul+add shape-dependently); the eager
+    test below shows the tiling itself is exact."""
+    x = _rand((64, 96), seed=4)
+    kw = dict(wavelet="cdf97", levels=2, scheme=scheme, backend="pallas",
+              tap_opt=tap_opt)
+    mono = T.dwt2(x, **kw)
+    tiled = T.dwt2(x, tiles=(32, 32), **kw)
+    _assert_pyr_equal(mono, tiled, exact=False, rtol=1e-5, atol=1e-5)
+    xr = T.idwt2(tiled, wavelet="cdf97", scheme=scheme, backend="pallas",
+                 tap_opt=tap_opt, tiles=(32, 32))
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_window_transform_is_exact_eagerly():
+    """The decisive exactness check: running the kernels' window walk
+    *eagerly* (op-by-op, no XLA fusion) on a halo window reproduces the
+    full-plane result bit for bit — any jitted-path difference is XLA
+    codegen rounding, not tiling error."""
+    from repro.core import schemes as S
+    from repro.engine.plan import scheme_steps
+    from repro.kernels import polyphase as PP
+    x = _rand((64, 64), seed=5)
+    planes = S.to_planes(x)
+    steps = scheme_steps("cdf97", "ns-polyconv", False, False)
+    r = sum(st.halo for st in steps)
+    # reference: periodic pad by the total reach, eager window walk
+    idx_m = np.arange(-r, 32 + r) % 32
+    ref = PP._apply_steps_windows(
+        steps, [p[idx_m[:, None], idx_m[None, :]] for p in planes])
+    # a tile window: margin 2r plane samples at offset -2r, walked eagerly
+    idx_w = np.arange(-3 * r, 32 + r) % 32
+    win = PP._apply_steps_windows(
+        steps, [p[idx_w[:, None], idx_w[None, :]] for p in planes])
+    for a, b in zip(ref, win):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b)[2 * r:, 2 * r:])
+
+
+# ---------------------------------------------------------------------------
+# Grid planning: exact margins from compiled programs
+# ---------------------------------------------------------------------------
+
+def test_margins_from_compiled_programs():
+    # sep-lifting CDF 9/7: 8 summed per-step halos, but the compiled
+    # whole-chain program's per-axis margin analysis proves reach 4
+    plan = E.get_plan(wavelet="cdf97", scheme="sep-lifting", levels=1,
+                      shape=(64, 64), dtype="float32", backend="pallas",
+                      fuse="scheme", tiles=(32, 32), cache=E.PlanCache())
+    # margin = 2^1 * 4 = 8, already a multiple of 2^1
+    assert plan.grid.margin == 8
+    assert plan.grid.window_shape == (32 + 16, 32 + 16)
+    assert plan.tile_count == 4
+
+    # propagation across levels: r=2 per level for ns-polyconv cdf97,
+    # margin = sum_l 2^(l+1)*2 = 4 + 8 + 16 = 28 -> rounded to 2^3 -> 32
+    plan3 = E.get_plan(wavelet="cdf97", scheme="ns-polyconv", levels=3,
+                       shape=(128, 128), dtype="float32", backend="jnp",
+                       tiles=(64, 64), cache=E.PlanCache())
+    assert plan3.grid.margin == 32
+
+
+def test_pyramid_margin_formula():
+    assert pyramid_margin([2], 1) == 4
+    assert pyramid_margin([2, 2, 2], 3) == 32   # 28 aligned up to 8
+    assert pyramid_margin([1, 1], 2) == 8       # 6 aligned up to 4
+
+
+def test_grid_geometry():
+    g = TileGrid(image_shape=(100, 120), tile=(48, 48), levels=2,
+                 margin=8, inv_margin=12)
+    assert g.grid_shape == (3, 3)           # ceil(100/48), ceil(120/48)
+    assert g.count == 9
+    assert g.window_shape == (64, 64)
+    assert g.inv_window_shape == (72, 72)
+    assert g.describe()["tiles"] == 9
+
+
+# ---------------------------------------------------------------------------
+# Geometry validation (clear errors instead of deep tracing failures)
+# ---------------------------------------------------------------------------
+
+def test_validate_levels_names_dimension_and_max_feasible():
+    with pytest.raises(ValueError, match=r"W=48.*max feasible levels.*is 4"):
+        validate_geometry(64, 48, 5)
+    with pytest.raises(ValueError, match=r"H=20"):
+        validate_geometry(20, 64, 3)
+    # fine geometries pass
+    validate_geometry(64, 48, 4)
+    validate_geometry(64, 64, 2, tiles=(32, 32))
+
+
+def test_validate_tile_alignment():
+    with pytest.raises(ValueError, match=r"tile H=24.*2\^levels=16"):
+        validate_geometry(64, 64, 4, tiles=(24, 32))
+    with pytest.raises(ValueError, match="positive"):
+        validate_geometry(64, 64, 1, tiles=(0, 32))
+
+
+def test_dwt2_surfaces_validation_errors():
+    x = _rand((64, 96), seed=6)
+    with pytest.raises(ValueError, match="max feasible levels"):
+        T.dwt2(x, levels=6)
+    with pytest.raises(ValueError, match="tile"):
+        T.dwt2(x, levels=3, tiles=(20, 32))
+    # oversized tiles clamp to the image instead of erroring
+    pyr = T.dwt2(x, levels=2, tiles=(256, 256))
+    mono = T.dwt2(x, levels=2)
+    _assert_pyr_equal(mono, pyr, exact=True)
+
+
+# ---------------------------------------------------------------------------
+# Plan caching & engine stats
+# ---------------------------------------------------------------------------
+
+def test_tiled_plans_cached_like_monolithic():
+    E.clear_plan_cache()
+    x = _rand((64, 64), seed=7)
+    T.dwt2(x, levels=2, tiles=(32, 32))
+    before = E.plan_cache_stats()
+    T.dwt2(x, levels=2, tiles=(32, 32))
+    after = E.plan_cache_stats()
+    assert after["hits"] >= before["hits"] + 1   # tiled + window plan hits
+    assert after["misses"] == before["misses"]
+    # a different tiling is a different plan
+    T.dwt2(x, levels=2, tiles=(16, 16))
+    assert E.plan_cache_stats()["misses"] > after["misses"]
+
+
+def test_engine_stats_reports_tiles_and_op_counts():
+    E.clear_plan_cache()
+    x = _rand((64, 64), seed=8)
+    T.dwt2(x, levels=2, tiles=(32, 32))
+    st = E.stats()
+    assert st["plan_cache"]["misses"] >= 1
+    tiled_rows = [r for r in st["plans"] if r.get("tiles")]
+    assert tiled_rows, st
+    row = tiled_rows[0]
+    assert row["tile_count"] == 4 and row["tile_grid"] == (2, 2)
+    assert row["halo_margin"] > 0
+    assert any("compiled_macs" in r for r in st["plans"])
+
+
+# ---------------------------------------------------------------------------
+# Streaming executor (out-of-core)
+# ---------------------------------------------------------------------------
+
+def test_stream_larger_than_any_single_launch_plane(tmp_path):
+    """A 1024x1536 memmapped image — larger than any plane a single
+    kernel launch handles anywhere in this suite — streamed band by
+    band, bit-identical to the (eager jnp) monolithic transform."""
+    h, w = 1024, 1536
+    path = tmp_path / "big.f32"
+    disk = np.memmap(path, dtype=np.float32, mode="w+", shape=(h, w))
+    disk[:] = np.random.default_rng(9).standard_normal((h, w))
+    disk.flush()
+    img = np.memmap(path, dtype=np.float32, mode="r", shape=(h, w))
+    pyr = stream_dwt2(img, wavelet="cdf97", levels=3,
+                      scheme="ns-polyconv", tiles=(256, 256), fuse="none")
+    assert isinstance(pyr.ll, np.ndarray)       # host-resident output
+    mono = T.dwt2(jnp.asarray(np.asarray(img)), wavelet="cdf97", levels=3,
+                  scheme="ns-polyconv")
+    _assert_pyr_equal(mono, pyr, exact=True)
+
+
+def test_stream_non_dividing_and_inflight():
+    x = np.asarray(_rand((192, 160), seed=10))
+    mono = T.dwt2(jnp.asarray(x), wavelet="cdf53", levels=2,
+                  scheme="sep-conv")
+    for inflight in (1, 3):
+        pyr = stream_dwt2(x, wavelet="cdf53", levels=2, scheme="sep-conv",
+                          tiles=(64, 64), fuse="none",
+                          max_inflight=inflight)
+        _assert_pyr_equal(mono, pyr, exact=True)
+    with pytest.raises(ValueError, match="max_inflight"):
+        stream_dwt2(x, levels=1, tiles=(64, 64), max_inflight=0)
+    with pytest.raises(ValueError, match="single"):
+        stream_dwt2(x[None], levels=1, tiles=(64, 64))
+
+
+# ---------------------------------------------------------------------------
+# shard_map transport (subprocess: 4 fake devices, 2x2 tile mesh)
+# ---------------------------------------------------------------------------
+
+def run_sub(code: str, devices: int = 4, timeout: int = 480) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_shard_map_transport_matches_gather():
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import transform as T
+        from repro.tiling import dwt2_tiled, idwt2_tiled
+        from repro.distributed.sharding import make_tile_mesh
+
+        x = jnp.asarray(np.random.default_rng(3)
+                        .standard_normal((128, 128)), jnp.float32)
+        mesh = make_tile_mesh(2, 2)
+        mono = T.dwt2(x, wavelet='cdf97', levels=2, scheme='ns-polyconv')
+        pyr = dwt2_tiled(x, wavelet='cdf97', levels=2,
+                         scheme='ns-polyconv', tiles=(64, 64),
+                         transport='shard_map', mesh=mesh)
+        for a, b in zip([mono.ll, *mono.details[0], *mono.details[1]],
+                        [pyr.ll, *pyr.details[0], *pyr.details[1]]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        assert 'tr' in str(pyr.ll.sharding.spec)   # stays sharded
+        xr = idwt2_tiled(pyr, wavelet='cdf97', scheme='ns-polyconv',
+                         tiles=(64, 64), transport='shard_map', mesh=mesh)
+        err = float(jnp.max(jnp.abs(xr - x)))
+        assert err < 1e-4, err
+        print('SHARD_OK', err)
+    """)
+    assert "SHARD_OK" in out
+
+
+def test_shard_map_preconditions():
+    from repro.tiling.exchange import validate_shard_grid
+    g = TileGrid(image_shape=(128, 120), tile=(64, 48), levels=1,
+                 margin=8, inv_margin=8)
+
+    class FakeMesh:
+        axis_names = ("tr", "tc")
+        devices = np.empty((2, 2))
+
+    with pytest.raises(ValueError, match="evenly"):
+        validate_shard_grid(g, FakeMesh(), ("tr", "tc"))
+    g2 = TileGrid(image_shape=(128, 128), tile=(64, 64), levels=1,
+                  margin=8, inv_margin=8)
+    with pytest.raises(ValueError, match="mesh axis"):
+        validate_shard_grid(g2, FakeMesh(), ("rows", "cols"))
+    g3 = TileGrid(image_shape=(128, 128), tile=(64, 64), levels=1,
+                  margin=96, inv_margin=8)
+    with pytest.raises(ValueError, match="single-hop"):
+        validate_shard_grid(g3, FakeMesh(), ("tr", "tc"))
+    validate_shard_grid(g2, FakeMesh(), ("tr", "tc"))  # passes
+
+    with pytest.raises(ValueError, match="mesh"):
+        dwt2_tiled(_rand((64, 64)), tiles=(32, 32), transport="shard_map")
+    with pytest.raises(ValueError, match="transport"):
+        dwt2_tiled(_rand((64, 64)), tiles=(32, 32), transport="rdma")
