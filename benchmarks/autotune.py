@@ -1,0 +1,117 @@
+"""Block-size autotuner: measure, pick, persist.
+
+    PYTHONPATH=src python -m benchmarks.autotune [--quick] [--out PATH]
+        [--backend jnp|pallas] [--schemes a,b] [--shapes 512x512,...]
+        [--fuse none,scheme,levels,pyramid]
+
+Sweeps ``block=`` candidates per ``(scheme, shape, fuse, backend)``,
+measures steady-state wall time of a plan execution (after one warmup
+for compile), and persists each winner into the JSON block table that
+:func:`repro.engine.plan._pick_block` consults on every later plan
+build (``BLOCK_TABLE.json`` at the repo root, or ``$REPRO_BLOCK_TABLE``).
+
+Candidates are plane-space targets, matching the engine's static
+default ``(256, 512)``; the sweep builds plans directly (bypassing both
+the plan cache and the table) so a stale table never influences the
+measurement.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+CANDIDATES = ((128, 256), (256, 512), (512, 512), (256, 1024))
+QUICK_CANDIDATES = ((128, 256), (256, 512))
+
+
+def _parse(argv):
+    opts = {"quick": "--quick" in argv, "out": None, "backend": "pallas",
+            "schemes": None, "shapes": None, "fuse": None}
+    for flag, key in (("--out", "out"), ("--backend", "backend"),
+                      ("--schemes", "schemes"), ("--shapes", "shapes"),
+                      ("--fuse", "fuse")):
+        if flag in argv:
+            i = argv.index(flag)
+            if i + 1 >= len(argv):
+                raise SystemExit(f"{flag} requires an argument")
+            opts[key] = argv[i + 1]
+    return opts
+
+
+def measure(plan, x, reps: int = 3) -> float:
+    """Median seconds per execution (one warmup for compile/trace)."""
+    jax.block_until_ready(plan.execute(x).ll)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(plan.execute(x).ll)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def sweep(scheme: str, shape, fuse: str, backend: str, candidates,
+          wavelet: str = "cdf97", levels: int = 2, reps: int = 3):
+    """Measure every candidate block for one configuration; returns
+    ``(best_block, {block: seconds})``."""
+    from repro import engine as E
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(shape).astype(np.float32)
+    timings = {}
+    for cand in candidates:
+        key = E.PlanKey(wavelet=wavelet, scheme=scheme, levels=levels,
+                        shape=tuple(shape), dtype="float32",
+                        backend=backend, optimize=False, fuse=fuse,
+                        boundary="periodic")
+        plan = E.build_plan(key, block_target=cand)  # bypass cache + table
+        timings[cand] = measure(plan, x, reps)
+    best = min(timings, key=timings.get)
+    return best, timings
+
+
+def main() -> dict:
+    opts = _parse(sys.argv)
+    from repro.core.schemes import SCHEMES
+    from repro.engine import autotune as AT
+
+    backend = opts["backend"]
+    schemes = (opts["schemes"].split(",") if opts["schemes"]
+               else (("ns-polyconv",) if opts["quick"] else tuple(SCHEMES)))
+    shapes = ([tuple(int(d) for d in s.split("x"))
+               for s in opts["shapes"].split(",")] if opts["shapes"]
+              else ([(256, 256)] if opts["quick"] else [(512, 512),
+                                                        (1024, 1024)]))
+    fuses = (opts["fuse"].split(",") if opts["fuse"]
+             else (("levels",) if opts["quick"]
+                   else ("levels", "pyramid")))
+    candidates = QUICK_CANDIDATES if opts["quick"] else CANDIDATES
+    out = opts["out"] or str(AT.table_path())
+
+    print(f"# block autotuner: backend={backend} -> {out}")
+    print("scheme,shape,fuse,best_block,best_ms,default_ms")
+    results = {}
+    for scheme in schemes:
+        for shape in shapes:
+            for fuse in fuses:
+                best, timings = sweep(scheme, shape, fuse, backend,
+                                      candidates,
+                                      reps=2 if opts["quick"] else 3)
+                AT.save_entry(scheme, shape, fuse, backend, best, path=out)
+                default_t = timings.get((256, 512))
+                default_ms = (f"{default_t*1e3:.2f}"
+                              if default_t is not None else "-")
+                print(f"{scheme},{shape[0]}x{shape[1]},{fuse},"
+                      f"{best[0]}x{best[1]},{timings[best]*1e3:.2f},"
+                      f"{default_ms}")
+                results[AT.table_key(scheme, shape, fuse, backend)] = {
+                    "best": list(best),
+                    "timings_ms": {f"{b[0]}x{b[1]}": t * 1e3
+                                   for b, t in timings.items()}}
+    print(f"# wrote {len(results)} entries to {out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

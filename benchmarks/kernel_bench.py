@@ -34,7 +34,7 @@ def engine_plan_summary(shape=(8, 2048, 2048), levels: int = 3,
     cache = E.PlanCache()
     rows = []
     for sc in S.SCHEMES:
-        for fuse in ("none", "scheme", "levels"):
+        for fuse in ("none", "scheme", "levels", "pyramid"):
             plan = E.get_plan(wavelet=wavelet, scheme=sc, levels=levels,
                               shape=shape, dtype="float32",
                               backend="pallas", fuse=fuse, cache=cache)
@@ -47,6 +47,41 @@ def engine_plan_summary(shape=(8, 2048, 2048), levels: int = 3,
                          "macs": macs})
             print(f"{sc},{fuse},{plan.num_steps},{plan.pallas_calls},"
                   f"{ls.block[0]}x{ls.block[1]},{ls.halo},{macs}")
+    return rows
+
+
+def fuse_mode_hbm(shape=(4096, 4096), levels: int = 3,
+                  wavelet: str = "cdf97", itemsize: int = 4):
+    """HBM model bytes of one multi-level forward transform per fuse mode
+    (split/merge traffic counted for the plane-based modes; the fused
+    pyramid splits in-VMEM and omits it).  The CI gate asserts
+    ``pyramid < levels`` for every scheme from these rows."""
+    from repro import compiler as C
+    from repro.engine.plan import scheme_steps
+    from repro.kernels import polyphase as PP
+    print(f"# fuse-mode HBM model: {shape[0]}x{shape[1]} f32, {levels} "
+          f"levels ({wavelet})")
+    print("scheme,none_MB,scheme_MB,levels_MB,pyramid_MB,pyramid_vs_levels")
+    rows = []
+    for sc in S.SCHEMES:
+        steps = scheme_steps(wavelet, sc, False, False)
+        pn = C.compile_scheme_programs(wavelet, sc, False, False, "full",
+                                       "none")
+        ps = C.compile_scheme_programs(wavelet, sc, False, False, "full",
+                                       "scheme")
+        vals = {}
+        for fuse, progs in (("none", pn), ("scheme", ps), ("levels", ps),
+                            ("pyramid", ps)):
+            vals[fuse] = PP.pyramid_hbm_bytes(steps, shape, itemsize,
+                                              levels, fuse=fuse,
+                                              programs=progs)
+        ratio = vals["pyramid"] / vals["levels"]
+        rows.append({"scheme": sc, **{f"{k}_bytes": v
+                                      for k, v in vals.items()},
+                     "pyramid_vs_levels": ratio})
+        print(f"{sc},{vals['none']/1e6:.1f},{vals['scheme']/1e6:.1f},"
+              f"{vals['levels']/1e6:.1f},{vals['pyramid']/1e6:.1f},"
+              f"{ratio:.3f}")
     return rows
 
 
@@ -79,8 +114,10 @@ def main():
                       f"{st['hbm_bytes']/1e6:.1f},{t_mem:.0f},{t_cmp:.0f},"
                       f"{bound}")
     print()
+    fuse_rows = fuse_mode_hbm()
+    print()
     plans = engine_plan_summary()
-    return {"roofline": rows, "plans": plans}
+    return {"roofline": rows, "fuse_modes": fuse_rows, "plans": plans}
 
 
 if __name__ == "__main__":

@@ -63,8 +63,18 @@ def main() -> None:
         n=256 if quick else 512, tile=64 if quick else 128)
 
     print("=" * 72)
+    doc["pyramid"] = throughput.pyramid_throughput(
+        n=32 if quick else 64, batch=2 if quick else 4)
+
+    print("=" * 72)
     from benchmarks import kernel_bench
     doc["kernels"] = kernel_bench.main()
+    # CI gate: the fused-pyramid megakernel must move strictly fewer
+    # modelled HBM bytes than per-level kernels for every scheme
+    worse = [r["scheme"] for r in doc["kernels"]["fuse_modes"]
+             if not r["pyramid_bytes"] < r["levels_bytes"]]
+    assert not worse, \
+        f"fuse='pyramid' HBM bytes not below fuse='levels' for: {worse}"
 
     print("=" * 72)
     from benchmarks import compression_bench
@@ -82,17 +92,23 @@ def main() -> None:
     stats = engine.stats()
     doc["engine_stats"] = stats
     cache = stats["plan_cache"]
+    pyr = stats["pyramid"]
     print(f"# engine stats: plan cache {cache['hits']} hits / "
           f"{cache['misses']} misses, {cache['size']} plans resident")
+    print(f"# pyramid: {pyr['pyramid_kernel_launches']} megakernel "
+          f"launches, {pyr['vmem_fallbacks']} VMEM fallbacks")
     for row in stats["plans"]:
         tiling = (f" tiles={row['tile_grid']}x{row['tiles']} "
                   f"margin={row['halo_margin']}" if "tiles" in row else "")
         macs = (f" macs={row['compiled_macs']}" if "compiled_macs" in row
                 else "")
+        pyrw = (f" window={row['pyramid_window']}"
+                if "pyramid_window" in row else "")
+        fb = " FALLBACK" if "fallback" in row else ""
         print(f"#   {row['wavelet']}/{row['scheme']} L{row['levels']} "
               f"{row['shape']} {row['backend']}/{row['fuse']}"
               f"/{row['tap_opt']} steps={row['num_steps']}"
-              f" launches={row['pallas_calls']}{macs}{tiling}")
+              f" launches={row['pallas_calls']}{macs}{tiling}{pyrw}{fb}")
 
     print("=" * 72)
     doc["elapsed_s"] = time.time() - t0

@@ -151,6 +151,35 @@ def tiled_throughput(n: int = 512, levels: int = 3, tile: int = 128,
     return rows
 
 
+def pyramid_throughput(n: int = 64, levels: int = 2, batch: int = 4,
+                       wavelet: str = "cdf97", scheme: str = "ns-polyconv",
+                       reps: int = 3):
+    """Measured pallas (interpret on CPU) wall clock of the fused-pyramid
+    megakernel versus per-level kernels, plus the engine's pyramid
+    counters.  On CPU the interpreter dominates, so the interesting
+    number on this host is the HBM model ratio (see the fuse-mode HBM
+    section); the measured rows make regressions visible anyway."""
+    print(f"# fused pyramid: pallas-interpret, batch={batch}, {n}x{n}, "
+          f"{levels} levels ({wavelet}/{scheme})")
+    print("fuse,img_per_s,pallas_calls")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, n, n)), jnp.float32)
+    rows = []
+    for fuse in ("levels", "pyramid"):
+        t = _time(lambda: T.dwt2(x, wavelet=wavelet, levels=levels,
+                                 scheme=scheme, backend="pallas",
+                                 fuse=fuse), reps)
+        plan = E.get_plan(wavelet=wavelet, scheme=scheme, levels=levels,
+                          shape=x.shape, dtype="float32", backend="pallas",
+                          fuse=fuse)
+        rows.append({"fuse": fuse, "img_per_s": batch / t,
+                     "pallas_calls": plan.pallas_calls})
+        print(f"{fuse},{batch / t:.1f},{plan.pallas_calls}")
+    counters = E.stats()["pyramid"]
+    print(f"# pyramid counters: {counters}")
+    return {"rows": rows, "counters": counters}
+
+
 def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
     print("# Figures 7/8/9 analogue: GB/s per scheme vs image size")
     print("wavelet,scheme,size,cpu_measured_GBps,tpu_model_GBps,"

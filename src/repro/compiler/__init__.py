@@ -31,14 +31,19 @@ from __future__ import annotations
 import functools
 from typing import Sequence, Tuple
 
-from repro.compiler import execute, ir, lower, passes
+from repro.compiler import execute, ir, lower, passes, pyramid
 from repro.compiler.ir import Node, TapProgram, Term
 from repro.compiler.passes import OPT_LEVELS, optimize_program
+from repro.compiler.pyramid import (PyramidSchedule, compile_pyramid_programs,
+                                    forward_schedule, inverse_schedule,
+                                    level_reaches)
 
 __all__ = [
     "Node", "TapProgram", "Term", "OPT_LEVELS", "compile_steps",
     "compile_scheme_programs", "optimize_program", "program_stats",
-    "execute", "ir", "lower", "passes",
+    "PyramidSchedule", "compile_pyramid_programs", "forward_schedule",
+    "inverse_schedule", "level_reaches",
+    "execute", "ir", "lower", "passes", "pyramid",
 ]
 
 

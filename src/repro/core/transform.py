@@ -32,7 +32,15 @@ Parameters shared by :func:`dwt2` and :func:`idwt2`:
       only the pallas backend (jnp has no kernel granularity to fuse)
     * "levels"  — the whole multi-level pyramid is one traced
       computation; level kernels chain without returning to Python
-      between levels (fastest for repeated production traffic)
+      between levels (fastest dispatch for repeated traffic)
+    * "pyramid" — the whole multi-level pyramid is a **single
+      pallas_call**: polyphase split/merge happens in-VMEM on
+      compound-halo windows of the interleaved image and the LL plane
+      never round-trips through HBM between levels (fewest bytes
+      moved).  Falls back to "levels" execution when the compound
+      window exceeds the VMEM budget (``$REPRO_PYRAMID_VMEM_LIMIT``);
+      on the jnp backend it runs the eager per-level chain,
+      bit-identical to "none".
 ``boundary``
     Signal-extension rule at image edges.  Only ``"periodic"`` is
     implemented (matching the paper's polyphase algebra, where every

@@ -7,11 +7,13 @@ wrappers over this package.
 """
 from repro.engine.cache import (PlanCache, clear_plan_cache, get_plan,
                                 global_cache, plan_cache_stats, stats)
-from repro.engine.plan import (DwtPlan, LevelSpec, PlanKey, Pyramid,
-                               build_plan, scheme_steps)
+from repro.engine.plan import (COUNTERS, DwtPlan, LevelSpec, PlanKey,
+                               Pyramid, PyramidSpec, build_plan,
+                               pyramid_vmem_limit, scheme_steps)
 
 __all__ = [
-    "DwtPlan", "LevelSpec", "PlanKey", "Pyramid", "build_plan",
-    "scheme_steps", "PlanCache", "get_plan", "global_cache",
-    "plan_cache_stats", "clear_plan_cache", "stats",
+    "DwtPlan", "LevelSpec", "PlanKey", "Pyramid", "PyramidSpec",
+    "build_plan", "scheme_steps", "PlanCache", "get_plan", "global_cache",
+    "plan_cache_stats", "clear_plan_cache", "stats", "COUNTERS",
+    "pyramid_vmem_limit",
 ]

@@ -1,0 +1,90 @@
+"""Autotuned block-size table: measured best blocks per configuration.
+
+``benchmarks/autotune.py`` sweeps ``block=`` candidates per
+``(scheme, shape, fuse, backend)`` and persists the winners into a small
+JSON table (``BLOCK_TABLE.json`` at the repo root by default, or the
+path in ``$REPRO_BLOCK_TABLE``).  :func:`repro.engine.plan._pick_block`
+consults this table before falling back to the static default target, so
+a one-off offline sweep speeds up every later plan build with zero API
+changes.
+
+The table format is intentionally trivial — ``{key: [bh, bw]}`` with
+``key = "scheme|HxW|fuse|backend"`` — so it can be versioned, diffed,
+and merged by hand.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Optional, Tuple
+
+TABLE_ENV = "REPRO_BLOCK_TABLE"
+# src/repro/engine/autotune.py -> engine -> repro -> src -> repo root
+DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] / \
+    "BLOCK_TABLE.json"
+
+_cache: dict = {"path": None, "mtime": None, "table": {}}
+
+
+def table_path() -> pathlib.Path:
+    return pathlib.Path(os.environ.get(TABLE_ENV, str(DEFAULT_PATH)))
+
+
+def table_key(scheme: str, shape: Tuple[int, int], fuse: str,
+              backend: str) -> str:
+    return f"{scheme}|{shape[0]}x{shape[1]}|{fuse}|{backend}"
+
+
+def load_table() -> dict:
+    """Load (and mtime-cache) the block table; missing file -> empty."""
+    path = table_path()
+    try:
+        mtime = path.stat().st_mtime
+    except OSError:
+        return {}
+    if _cache["path"] == str(path) and _cache["mtime"] == mtime:
+        return _cache["table"]
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        table = {}
+    _cache.update(path=str(path), mtime=mtime, table=table)
+    return table
+
+
+def clear_cache() -> None:
+    _cache.update(path=None, mtime=None, table={})
+
+
+def lookup(scheme: str, shape: Tuple[int, int], fuse: str,
+           backend: str) -> Optional[Tuple[int, int]]:
+    """Best measured block for one configuration, or None (use default)."""
+    entry = load_table().get(table_key(scheme, shape, fuse, backend))
+    if not entry:
+        return None
+    try:
+        bh, bw = int(entry[0]), int(entry[1])
+    except (TypeError, ValueError, IndexError):
+        return None
+    return (bh, bw) if bh > 0 and bw > 0 else None
+
+
+def save_entry(scheme: str, shape: Tuple[int, int], fuse: str, backend: str,
+               block: Tuple[int, int], path=None) -> None:
+    """Merge one winner into the table on disk (read-modify-write)."""
+    p = pathlib.Path(path) if path is not None else table_path()
+    table = {}
+    if p.exists():
+        try:
+            with open(p) as f:
+                table = json.load(f)
+        except (OSError, ValueError):
+            table = {}
+    table[table_key(scheme, shape, fuse, backend)] = [int(block[0]),
+                                                      int(block[1])]
+    with open(p, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+    clear_cache()

@@ -97,10 +97,12 @@ def clear_plan_cache() -> None:
 
 
 def stats() -> dict:
-    """Engine-wide observability summary: plan-cache hit/miss counters
+    """Engine-wide observability summary: plan-cache hit/miss counters,
+    fused-pyramid counters (kernel launches, VMEM-budget fallbacks),
     plus one row per cached plan (steps, kernel launches, compiled
-    tap-program op counts, tile counts) — what benchmarks and production
-    dashboards need to see at a glance."""
+    tap-program op counts, tile counts, pyramid window geometry) — what
+    benchmarks and production dashboards need to see at a glance."""
+    from repro.engine import plan as P
     with _GLOBAL._lock:
         items = list(_GLOBAL._plans.items())
     plans = []
@@ -121,5 +123,12 @@ def stats() -> dict:
             row["tile_count"] = plan.tile_count
             row["tile_grid"] = plan.grid.grid_shape
             row["halo_margin"] = plan.grid.margin
+        if plan.pyramid is not None:
+            row["pyramid_block"] = plan.pyramid.block
+            row["pyramid_window"] = plan.pyramid.window_shape
+            row["pyramid_vmem_bytes"] = plan.pyramid.vmem_bytes
+        if plan.fallback is not None:
+            row["fallback"] = plan.fallback
         plans.append(row)
-    return {"plan_cache": _GLOBAL.stats(), "plans": plans}
+    return {"plan_cache": _GLOBAL.stats(), "pyramid": dict(P.COUNTERS),
+            "plans": plans}

@@ -58,7 +58,7 @@ def _level_forward(x, spec, key):
     if key.backend == "pallas":
         return PP.apply_steps_pallas(
             spec.fwd_steps, planes,
-            fuse=("scheme" if key.fuse in ("scheme", "levels") else "none"),
+            fuse=("none" if key.fuse == "none" else "scheme"),
             block=spec.block, compute_dtype=cdt, tap_opt=key.tap_opt,
             programs=spec.fwd_programs)
     if spec.fwd_programs is not None:
@@ -75,7 +75,7 @@ def _level_inverse(planes, spec, key):
     if key.backend == "pallas":
         planes = PP.apply_steps_pallas(
             spec.inv_steps, planes,
-            fuse=("scheme" if key.fuse in ("scheme", "levels") else "none"),
+            fuse=("none" if key.fuse == "none" else "scheme"),
             block=spec.block, compute_dtype=cdt, tap_opt=key.tap_opt,
             programs=spec.inv_programs)
     elif spec.inv_programs is not None:
@@ -86,6 +86,49 @@ def _level_inverse(planes, spec, key):
         planes = tuple(p.astype(out_dtype)
                        for p in apply_steps_jnp(spec.inv_steps, planes))
     return S.from_planes(planes)
+
+
+def _pyramid_kernel_kwargs(plan, inverse: bool) -> dict:
+    key, spec = plan.key, plan.pyramid
+    steps = (plan.level_specs[0].inv_steps if inverse
+             else plan.level_specs[0].fwd_steps)
+    return dict(
+        levels=key.levels, steps=steps,
+        sched=spec.inv_sched if inverse else spec.fwd_sched,
+        programs=spec.inv_programs if inverse else spec.fwd_programs,
+        # the plane-space target; the kernel re-derives the image-space
+        # block exactly like _resolve_pyramid did (single source: the
+        # shared _pick_block_aligned walk)
+        block=spec.target,
+        compute_dtype=jnp.dtype(key.compute_dtype))
+
+
+def make_pyramid_forward(plan):
+    """Forward executor of a fused-pyramid plan: one pallas_call for the
+    whole multi-level transform (details returned coarsest-first)."""
+    from repro.engine import plan as PLAN
+    fn = jax.jit(functools.partial(PP.pyramid_forward_pallas,
+                                   **_pyramid_kernel_kwargs(plan, False)))
+
+    def run(x):
+        PLAN.COUNTERS["pyramid_kernel_launches"] += 1
+        ll, details = fn(x)
+        return ll, tuple(details[::-1])
+
+    return run
+
+
+def make_pyramid_inverse(plan):
+    """Inverse executor of a fused-pyramid plan (single pallas_call)."""
+    from repro.engine import plan as PLAN
+    fn = jax.jit(functools.partial(PP.pyramid_inverse_pallas,
+                                   **_pyramid_kernel_kwargs(plan, True)))
+
+    def run(ll, details):
+        PLAN.COUNTERS["pyramid_kernel_launches"] += 1
+        return fn(ll, tuple(details[::-1]))
+
+    return run
 
 
 def make_forward(plan):
@@ -101,6 +144,15 @@ def make_forward(plan):
             details.append((hl, lh, hh))
         return ll, tuple(details[::-1])
 
+    if key.fuse == "pyramid":
+        if key.backend == "pallas" and plan.pyramid is not None:
+            return make_pyramid_forward(plan)
+        if key.backend == "jnp":
+            # eager per-level chain: bit-identical to fuse="none" (no
+            # kernel granularity to fuse on this backend)
+            return run
+        # VMEM-budget fallback: execute as fuse="levels"
+        return jax.jit(run)
     if key.fuse == "levels":
         # one trace for the whole pyramid: levels chain without returning
         # to Python between them
@@ -133,6 +185,12 @@ def make_inverse(plan):
             ll = _level_inverse((ll, hl, lh, hh), spec, key)
         return ll
 
+    if key.fuse == "pyramid":
+        if key.backend == "pallas" and plan.pyramid is not None:
+            return make_pyramid_inverse(plan)
+        if key.backend == "jnp":
+            return run
+        return jax.jit(run)
     if key.fuse == "levels":
         return jax.jit(run)
     if key.backend == "pallas":

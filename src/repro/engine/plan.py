@@ -22,12 +22,22 @@ Execution semantics (see :mod:`repro.engine.executor`):
 * ``fuse="scheme"`` — one pallas_call per level (compound halo);
 * ``fuse="levels"`` — the whole multi-level pyramid is a single traced
   computation: level kernels are chained without returning to Python
-  between levels, and each level runs as one fused kernel.
+  between levels, and each level runs as one fused kernel;
+* ``fuse="pyramid"`` — the whole multi-level pyramid is a **single
+  pallas_call**: polyphase split/merge happens in-VMEM on compound-halo
+  windows of the interleaved image and the LL plane never touches HBM
+  between levels (see :mod:`repro.kernels.polyphase` /
+  :mod:`repro.compiler.pyramid`).  A VMEM-budget guard falls back to
+  ``"levels"`` execution when the compound window would not fit
+  (``$REPRO_PYRAMID_VMEM_LIMIT`` bytes, default 12 MiB); on the jnp
+  backend, ``"pyramid"`` runs the eager per-level chain (bit-identical
+  to ``fuse="none"`` — there is no kernel granularity to fuse).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import List, Optional, Tuple
 
 import jax
@@ -42,9 +52,22 @@ from repro.core import schemes as S
 from repro.kernels import polyphase as PP
 from repro import compiler as C
 
-FUSE_MODES = ("none", "scheme", "levels")
+FUSE_MODES = ("none", "scheme", "levels", "pyramid")
 BOUNDARIES = ("periodic",)
 COMPUTE_DTYPES = ("float32", "bfloat16")
+
+PYRAMID_VMEM_LIMIT_ENV = "REPRO_PYRAMID_VMEM_LIMIT"
+DEFAULT_PYRAMID_VMEM_LIMIT = 12 * 2 ** 20  # of the ~16 MiB/core on TPU
+
+# engine-wide observability: fused-pyramid launches and VMEM-guard
+# fallbacks (surfaced through repro.engine.stats())
+COUNTERS = {"pyramid_kernel_launches": 0, "vmem_fallbacks": 0}
+
+
+def pyramid_vmem_limit() -> int:
+    """Configurable VMEM budget for the fused-pyramid kernel."""
+    v = os.environ.get(PYRAMID_VMEM_LIMIT_ENV)
+    return int(v) if v else DEFAULT_PYRAMID_VMEM_LIMIT
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +147,26 @@ class LevelSpec:
 
 
 @dataclasses.dataclass
+class PyramidSpec:
+    """Static execution parameters of one fused-pyramid megakernel."""
+
+    target: Tuple[int, int]           # plane-space block target (autotuned)
+    block: Tuple[int, int]            # image-space block core (bh, bw)
+    padded_shape: Tuple[int, int]     # image dims padded to block multiples
+    fwd_sched: C.PyramidSchedule
+    inv_sched: C.PyramidSchedule
+    # one whole-chain program per level (None when tap_opt == "off")
+    fwd_programs: Optional[Tuple[C.TapProgram, ...]]
+    inv_programs: Optional[Tuple[C.TapProgram, ...]]
+    vmem_bytes: int                   # estimated VMEM footprint (max dir)
+
+    @property
+    def window_shape(self) -> Tuple[int, int]:
+        m = self.fwd_sched.margins[0]
+        return (self.block[0] + 2 * m, self.block[1] + 2 * m)
+
+
+@dataclasses.dataclass
 class DwtPlan:
     """A fully-resolved, reusable multi-level DWT executor.
 
@@ -139,6 +182,10 @@ class DwtPlan:
     _inverse: Optional[object] = None
     # TileGrid when key.tiles is set (executors then come from repro.tiling)
     grid: Optional[object] = None
+    # PyramidSpec for fuse="pyramid" pallas plans; None after the
+    # VMEM-budget fallback (the plan then executes as fuse="levels")
+    pyramid: Optional[PyramidSpec] = None
+    fallback: Optional[str] = None      # why the pyramid kernel was skipped
 
     @property
     def num_steps(self) -> int:
@@ -156,6 +203,8 @@ class DwtPlan:
             return 0
         if self.key.fuse == "none":
             return self.num_steps
+        if self.key.fuse == "pyramid" and self.pyramid is not None:
+            return 1
         return len(self.level_specs)
 
     @property
@@ -218,9 +267,83 @@ def _resolve_level(index: int, h: int, w: int, key: PlanKey,
                      fwd_programs=fwd_programs, inv_programs=inv_programs)
 
 
+def _pick_block(key: PlanKey,
+                default: Tuple[int, int] = (256, 512)) -> Tuple[int, int]:
+    """Block target for a plan: the autotuned table entry for this
+    ``(scheme, shape, fuse, backend)`` when one exists
+    (:mod:`repro.engine.autotune`, populated by ``benchmarks/autotune``),
+    else the static ``default``."""
+    from repro.engine import autotune
+    tuned = autotune.lookup(key.scheme, key.shape[-2:], key.fuse,
+                            key.backend)
+    return tuned if tuned is not None else default
+
+
+def _resolve_pyramid(key: PlanKey, h: int, w: int,
+                     block_target: Tuple[int, int]
+                     ) -> Tuple[Optional[PyramidSpec], Optional[str]]:
+    """Resolve the fused-pyramid megakernel spec.
+
+    The VMEM-budget guard halves the block target until the compound
+    window (double-buffered scratch + compute intermediates) fits the
+    configurable limit; only when even the smallest phase-alignable
+    block is over budget does the plan fall back to ``fuse="levels"``
+    execution (counted in :data:`COUNTERS`)."""
+    L = key.levels
+    fwd_steps = scheme_steps(key.wavelet, key.scheme, key.optimize, False)
+    inv_steps = scheme_steps(key.wavelet, key.scheme, False, True)
+    fwd_programs = C.compile_pyramid_programs(
+        key.wavelet, key.scheme, key.optimize, False, key.tap_opt, L)
+    inv_programs = C.compile_pyramid_programs(
+        key.wavelet, key.scheme, False, True, key.tap_opt, L)
+    fwd_sched = C.forward_schedule(
+        C.level_reaches(fwd_steps, fwd_programs, L), L)
+    inv_sched = C.inverse_schedule(
+        C.level_reaches(inv_steps, inv_programs, L), L)
+    align = 1 << L
+    itemsize = jnp.dtype(key.dtype).itemsize
+    cdt_size = jnp.dtype(key.compute_dtype).itemsize
+    limit = pyramid_vmem_limit()
+    target = (int(block_target[0]), int(block_target[1]))
+    floor = max(1, align // 2)      # image-space block floor = 2^levels
+    spec = None
+    while True:
+        bh, hp2 = PP._pick_block_aligned(h, 2 * target[0], align)
+        bw, wp2 = PP._pick_block_aligned(w, 2 * target[1], align)
+        m = fwd_sched.margins[0]
+        fwd_wins = [(bh + 2 * m, bw + 2 * m)]
+        in_margins = [inv_sched.margins[L]] + \
+            [inv_sched.margins[l + 1]
+             for l in PP.pyramid_out_levels(L)[1:]]
+        inv_wins = [((bh >> (l + 1)) + 2 * g, (bw >> (l + 1)) + 2 * g)
+                    for l, g in zip(PP.pyramid_out_levels(L), in_margins)]
+        vmem = max(PP.pyramid_vmem_bytes(L, fwd_wins, itemsize, cdt_size),
+                   PP.pyramid_vmem_bytes(L, inv_wins, itemsize, cdt_size))
+        spec = PyramidSpec(target=target, block=(bh, bw),
+                           padded_shape=(hp2, wp2),
+                           fwd_sched=fwd_sched, inv_sched=inv_sched,
+                           fwd_programs=fwd_programs,
+                           inv_programs=inv_programs, vmem_bytes=vmem)
+        if vmem <= limit:
+            return spec, None
+        smaller = (max(target[0] // 2, floor), max(target[1] // 2, floor))
+        if smaller == target:
+            break
+        target = smaller
+    COUNTERS["vmem_fallbacks"] += 1
+    return None, (f"pyramid window {spec.window_shape} needs "
+                  f"~{spec.vmem_bytes} B VMEM > limit {limit} B even at "
+                  f"the minimum block; executing as fuse='levels'")
+
+
 def build_plan(key: PlanKey,
-               block_target: Tuple[int, int] = (256, 512)) -> DwtPlan:
-    """Resolve a :class:`PlanKey` into an executable :class:`DwtPlan`."""
+               block_target: Optional[Tuple[int, int]] = None) -> DwtPlan:
+    """Resolve a :class:`PlanKey` into an executable :class:`DwtPlan`.
+
+    ``block_target`` ``None`` consults the autotuned block table
+    (:func:`_pick_block`) and falls back to the static ``(256, 512)``;
+    an explicit value skips the table (the autotuner itself uses this).
+    """
     if key.backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {key.backend!r}")
     if key.fuse not in FUSE_MODES:
@@ -241,6 +364,8 @@ def build_plan(key: PlanKey,
         raise ValueError(f"levels must be >= 1, got {key.levels}")
     h, w = key.shape[-2], key.shape[-1]
     validate_image_geometry(h, w, key.levels)
+    if block_target is None:
+        block_target = _pick_block(key)
 
     fwd = scheme_steps(key.wavelet, key.scheme, key.optimize, False)
     inv = scheme_steps(key.wavelet, key.scheme, False, True)
@@ -249,6 +374,10 @@ def build_plan(key: PlanKey,
         specs.append(_resolve_level(lvl, h >> lvl, w >> lvl, key, fwd, inv,
                                     block_target))
     plan = DwtPlan(key=key, level_specs=tuple(specs))
+    if key.fuse == "pyramid" and key.backend == "pallas" \
+            and key.tiles is None:
+        plan.pyramid, plan.fallback = _resolve_pyramid(key, h, w,
+                                                       block_target)
 
     if key.tiles is not None:
         # deferred: tiling sits above the engine and imports it back

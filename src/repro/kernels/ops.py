@@ -51,7 +51,7 @@ def apply_scheme_pallas(x, *, wavelet: str = "cdf97",
     """
     from repro import compiler as C
     cdt = jnp.dtype(compute_dtype)
-    kfuse = "scheme" if fuse in ("scheme", "levels") else "none"
+    kfuse = "none" if fuse == "none" else "scheme"
     programs = (None if tap_opt == "off" else
                 C.compile_scheme_programs(wavelet, scheme,
                                           bool(optimize) and not inverse,
@@ -75,8 +75,10 @@ def scheme_stats(wavelet: str, scheme: str, optimize: bool,
                  fuse: str = "none", tap_opt: str = "full") -> dict:
     """Step count / op counts / ideal HBM bytes for the roofline model.
 
-    ``fuse`` accepts the engine's level-granularity modes too: "scheme"
-    and "levels" both collapse one level to one pallas_call.  ``ops`` is
+    ``fuse`` accepts the engine's level-granularity modes too: "scheme",
+    "levels" and "pyramid" all collapse one level to one pallas_call
+    (for the multi-level pyramid model see
+    :func:`repro.kernels.polyphase.pyramid_hbm_bytes`).  ``ops`` is
     the paper-convention raw matrix count; ``ops_compiled`` (and
     ``macs_per_pixel``) come straight from the compiled tap program that
     the kernels actually execute, so measured MACs/pixel are comparable
@@ -86,7 +88,7 @@ def scheme_stats(wavelet: str, scheme: str, optimize: bool,
     sch = (O.build_optimized(wavelet, scheme) if optimize
            else S.build_scheme(wavelet, scheme))
     steps = PP.steps_of(sch)
-    kfuse = "scheme" if fuse in ("scheme", "levels") else "none"
+    kfuse = "none" if fuse == "none" else "scheme"
     calls = 1 if kfuse == "scheme" else len(steps)
     programs = (None if tap_opt == "off" else
                 C.compile_scheme_programs(wavelet, scheme, optimize, False,

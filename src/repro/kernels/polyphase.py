@@ -21,6 +21,19 @@ with the compound halo (sum of per-step halos) and each step shrinks the
 valid region.  On a GPU this is impossible (threads cannot exchange halo
 values without a barrier); on TPU the halo is simply recomputed locally,
 reducing *every* scheme to one HBM round trip.  See EXPERIMENTS.md §Perf.
+
+Two further escalations of the same idea:
+
+* **fused pyramid** (:func:`pyramid_forward_pallas` /
+  :func:`pyramid_inverse_pallas`) — the *whole multi-level transform* in
+  one ``pallas_call``: compound-halo windows of the interleaved image,
+  polyphase split/merge via static strided slices in-VMEM, per-level
+  margins stacked by :mod:`repro.compiler.pyramid` so every in-window
+  split stays phase-aligned with the monolithic transform;
+* **double-buffered windows** — every kernel here owns two VMEM scratch
+  slots per input and starts the next grid block's DMA before the
+  current block's compute (the TPU grid is sequential per core), so
+  copies overlap arithmetic across the entire grid.
 """
 from __future__ import annotations
 
@@ -115,6 +128,42 @@ def _apply_steps_windows(steps: Sequence[StepSpec], xs: Sequence[jax.Array]
 # The pallas_call
 # ---------------------------------------------------------------------------
 
+def _pick_block_aligned(n: int, target: int, align: int) -> Tuple[int, int]:
+    """Like :func:`_pick_block`, but the block edge must be a multiple of
+    ``align`` (= ``2^levels`` for the fused-pyramid kernel, so every
+    window start is phase-aligned at every pyramid level).  ``n`` itself
+    must already be a multiple of ``align`` (image geometry is validated
+    upstream)."""
+    t = max(align, (min(n, target) // align) * align)
+    d = t
+    while d >= align and n % d:
+        d -= align
+    if d >= align and 2 * d >= t:
+        return d, n
+    return t, -(-n // t) * t
+
+
+def _pipeline_ids(grid: Tuple[int, int, int]):
+    """Current/next grid-block ids for double-buffered DMA windows.
+
+    The TPU grid runs sequentially per core (last dim fastest), so block
+    ``t``'s compute can overlap block ``t+1``'s copy.  Returns
+    ``(t, slot, (b, i, j), t1, slot1, (b1, i1, j1), total)`` where
+    ``slot``/``slot1`` alternate between the two scratch buffers.
+    """
+    nb, ni, nj = grid
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    t = (b * ni + i) * nj + j
+    t1 = t + 1
+    b1 = t1 // (ni * nj)
+    r1 = jax.lax.rem(t1, ni * nj)
+    return (t, jax.lax.rem(t, 2), (b, i, j),
+            t1, jax.lax.rem(t1, 2), (b1, r1 // nj, jax.lax.rem(r1, nj)),
+            nb * ni * nj)
+
+
 def _pick_block(n: int, target: int) -> Tuple[int, int]:
     """Block edge and padded plane size for one axis: ``(b, n_padded)``.
 
@@ -164,6 +213,11 @@ def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
     (fewer MACs, and a halo from the program's per-axis margin analysis —
     never larger than the summed step halos); without one it walks the
     raw matrices, which is the compiler's bit-identity reference.
+
+    The window copies are double-buffered: each plane has two VMEM
+    scratch slots and the next grid block's DMA is started before the
+    current block's compute, so the copy of window ``t+1`` overlaps the
+    arithmetic of window ``t`` across the whole (sequential) grid.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -183,22 +237,30 @@ def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
         o_refs = refs[4:8]
         scratch = refs[8:12]
         sems = refs[12]
-        b = pl.program_id(0)
-        i = pl.program_id(1)
-        j = pl.program_id(2)
-        copies = []
-        for k in range(4):
-            cp = pltpu.make_async_copy(
-                x_refs[k].at[b, pl.ds(i * bh, win[0]),
-                             pl.ds(j * bw, win[1])],
-                scratch[k],
-                sems.at[k],
-            )
-            cp.start()
-            copies.append(cp)
-        for cp in copies:
+        t, slot, cur, t1, slot1, nxt, total = _pipeline_ids(grid)
+
+        def dmas(slot, ids):
+            bb, ii, jj = ids
+            return [pltpu.make_async_copy(
+                x_refs[k].at[bb, pl.ds(ii * bh, win[0]),
+                             pl.ds(jj * bw, win[1])],
+                scratch[k].at[slot],
+                sems.at[slot, k],
+            ) for k in range(4)]
+
+        @pl.when(t == 0)
+        def _():
+            for cp in dmas(slot, cur):
+                cp.start()
+
+        @pl.when(t1 < total)
+        def _():
+            for cp in dmas(slot1, nxt):
+                cp.start()
+
+        for cp in dmas(slot, cur):
             cp.wait()
-        xs = [s[:, :].astype(compute_dtype) for s in scratch]
+        xs = [s[slot].astype(compute_dtype) for s in scratch]
         if program is not None:
             ys = CX.run_window(program, xs, r_total)
         else:
@@ -214,8 +276,9 @@ def _steps_pallas_call(steps: Tuple[StepSpec, ...], planes, *,
                    for _ in range(4)],
         out_shape=[jax.ShapeDtypeStruct((nb, hp2, wp2), out_dtype)
                    for _ in range(4)],
-        scratch_shapes=[pltpu.VMEM(win, planes[0].dtype) for _ in range(4)]
-        + [pltpu.SemaphoreType.DMA((4,))],
+        scratch_shapes=[pltpu.VMEM((2,) + win, planes[0].dtype)
+                        for _ in range(4)]
+        + [pltpu.SemaphoreType.DMA((2, 4))],
         interpret=interpret,
     )(*padded)
     if (hp2, wp2) != (hp, wp):
@@ -275,14 +338,272 @@ def apply_steps_pallas(steps: Sequence[StepSpec], planes, *,
 
 
 # ---------------------------------------------------------------------------
+# Fused-pyramid megakernel: the whole multi-level transform in one call
+# ---------------------------------------------------------------------------
+
+def pyramid_out_levels(levels: int) -> List[int]:
+    """Pyramid-kernel I/O layout: the level of each subband slot, in
+    order — coarsest LL first, then (HL, LH, HH) per level finest-first.
+    Shared by the forward/inverse kernels, the VMEM estimate, and the
+    HBM model so the four can never drift apart."""
+    return [levels - 1] + [l for l in range(levels) for _ in range(3)]
+
+
+def _split(x: jax.Array) -> List[jax.Array]:
+    """In-window polyphase split: four static strided slices (no HBM
+    gather — the deinterleave happens on the VMEM-resident window)."""
+    return [x[0::2, 0::2], x[0::2, 1::2], x[1::2, 0::2], x[1::2, 1::2]]
+
+
+def _interleave(planes: Sequence[jax.Array]) -> jax.Array:
+    """In-window polyphase merge (inverse of :func:`_split`)."""
+    x1, x2, x3, x4 = planes
+    a, b = x1.shape
+    top = jnp.stack([x1, x2], axis=-1).reshape(a, 2 * b)
+    bot = jnp.stack([x3, x4], axis=-1).reshape(a, 2 * b)
+    return jnp.stack([top, bot], axis=-2).reshape(2 * a, 2 * b)
+
+
+def _run_level_window(steps, program, xs, shrink, compute_dtype):
+    """One level of in-window work shrinking by exactly ``shrink``.
+
+    With a program, :func:`~repro.compiler.execute.run_window` absorbs
+    any alignment slack (``shrink >= program.halo``) into its margin
+    analysis; the raw matrix walk shrinks by the summed step halos, so
+    the slack is sliced off afterwards — keeping every mode's output at
+    the same, schedule-chosen offset.
+    """
+    if program is not None:
+        return CX.run_window(program, xs, shrink)
+    ys = _apply_steps_windows(steps, xs)
+    d = shrink - sum(st.halo for st in steps)
+    if d:
+        ys = [y[d:y.shape[0] - d, d:y.shape[1] - d] for y in ys]
+    return ys
+
+
+def pyramid_forward_pallas(x, *, levels: int, steps: Tuple[StepSpec, ...],
+                           sched, programs=None,
+                           block: Tuple[int, int] = (256, 512),
+                           interpret: Optional[bool] = None,
+                           compute_dtype=jnp.float32):
+    """Whole multi-level forward DWT as a **single** ``pallas_call``.
+
+    Per grid block, the kernel DMAs one compound-halo window of the
+    *interleaved* image (halo = ``sched.margins[0]``, the stacked
+    multi-level margin), splits it into polyphase planes in-VMEM via
+    static strided slices (no ``to_planes`` HBM pass), runs the level-0
+    program, then re-splits the in-window LL and runs deeper levels on
+    the shrinking valid region — the LL plane never touches HBM until
+    the coarsest level.  Per-level subbands are written straight to
+    their pyramid outputs, and the window copies are double-buffered
+    across the grid exactly like :func:`_steps_pallas_call`.
+
+    ``sched`` is a forward :class:`~repro.compiler.pyramid.PyramidSchedule`
+    (phase-aligned shrinks — see that module for the margin algebra).
+    Returns ``(ll, details)`` with details **finest-first**.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    x = jnp.asarray(x)
+    batch = x.shape[:-2]
+    h, w = x.shape[-2:]
+    align = 1 << levels
+    bh, hp2 = _pick_block_aligned(h, 2 * block[0], align)
+    bw, wp2 = _pick_block_aligned(w, 2 * block[1], align)
+    x3 = x.reshape((-1, h, w))
+    nb = x3.shape[0]
+    out_dtype = x3.dtype
+    M = sched.margins[0]
+    win = (bh + 2 * M, bw + 2 * M)
+    grid = (nb, hp2 // bh, wp2 // bw)
+    padded = _periodic_pad(x3, M, hp2, wp2)
+
+    out_levels = pyramid_out_levels(levels)
+    out_specs = [pl.BlockSpec((1, bh >> (l + 1), bw >> (l + 1)),
+                              lambda b, i, j: (b, i, j))
+                 for l in out_levels]
+    out_shape = [jax.ShapeDtypeStruct(
+        (nb, hp2 >> (l + 1), wp2 >> (l + 1)), out_dtype)
+        for l in out_levels]
+
+    def kernel(x_ref, *refs):
+        o_refs = refs[:1 + 3 * levels]
+        scratch = refs[-2]
+        sems = refs[-1]
+        t, slot, cur_ids, t1, slot1, nxt_ids, total = _pipeline_ids(grid)
+
+        def dma(slot, ids):
+            bb, ii, jj = ids
+            return pltpu.make_async_copy(
+                x_ref.at[bb, pl.ds(ii * bh, win[0]), pl.ds(jj * bw, win[1])],
+                scratch.at[slot],
+                sems.at[slot],
+            )
+
+        @pl.when(t == 0)
+        def _():
+            dma(slot, cur_ids).start()
+
+        @pl.when(t1 < total)
+        def _():
+            dma(slot1, nxt_ids).start()
+
+        dma(slot, cur_ids).wait()
+        cur = scratch[slot].astype(compute_dtype)
+        for l in range(levels):
+            ys = _run_level_window(steps, programs[l] if programs else None,
+                                   _split(cur), sched.shrinks[l],
+                                   compute_dtype)
+            m1 = sched.margins[l + 1]
+            ch, cw = bh >> (l + 1), bw >> (l + 1)
+            for k in range(1, 4):
+                o_refs[1 + 3 * l + k - 1][0, :, :] = \
+                    ys[k][m1:m1 + ch, m1:m1 + cw].astype(out_dtype)
+            cur = ys[0]
+            if l + 1 < levels and cur.dtype != out_dtype:
+                # value parity with per-level kernels, where the LL plane
+                # round-trips through the I/O dtype between levels
+                cur = cur.astype(out_dtype).astype(compute_dtype)
+        mL = sched.margins[levels]
+        o_refs[0][0, :, :] = cur[mL:mL + (bh >> levels),
+                                 mL:mL + (bw >> levels)].astype(out_dtype)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((2,) + win, out_dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
+        interpret=interpret,
+    )(padded)
+
+    def clip(o, l):
+        o = o[:, :h >> (l + 1), :w >> (l + 1)]
+        return o.reshape(batch + o.shape[-2:])
+
+    ll = clip(outs[0], levels - 1)
+    details = tuple(tuple(clip(outs[1 + 3 * l + d], l) for d in range(3))
+                    for l in range(levels))
+    return ll, details
+
+
+def pyramid_inverse_pallas(ll, details, *, levels: int,
+                           steps: Tuple[StepSpec, ...], sched,
+                           programs=None,
+                           block: Tuple[int, int] = (256, 512),
+                           interpret: Optional[bool] = None,
+                           compute_dtype=jnp.float32):
+    """Whole multi-level inverse DWT as a single ``pallas_call``.
+
+    ``details`` is finest-first (matching :func:`pyramid_forward_pallas`).
+    Per grid block the kernel DMAs the coarsest-LL window plus one
+    window per subband per level (margins from the inverse
+    :class:`~repro.compiler.pyramid.PyramidSchedule`), reconstructs the
+    coarsest level in-VMEM, re-interleaves via static stacking (no
+    ``from_planes`` HBM pass), and walks down to the full-resolution
+    block — the intermediate LL planes never touch HBM.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    ll = jnp.asarray(ll)
+    batch = ll.shape[:-2]
+    h, w = ll.shape[-2] << levels, ll.shape[-1] << levels
+    align = 1 << levels
+    bh, hp2 = _pick_block_aligned(h, 2 * block[0], align)
+    bw, wp2 = _pick_block_aligned(w, 2 * block[1], align)
+    out_dtype = ll.dtype
+    # level-l windows carry margin margins[l+1] (the LL one margins[L])
+    n_in = 1 + 3 * levels
+    in_levels = pyramid_out_levels(levels)
+    in_margins = [sched.margins[levels]] + \
+        [sched.margins[l + 1] for l in in_levels[1:]]
+    planes = [ll] + [d for det in details for d in det]
+    cores = [(bh >> (l + 1), bw >> (l + 1)) for l in in_levels]
+    wins = [(ch + 2 * m, cw + 2 * m)
+            for (ch, cw), m in zip(cores, in_margins)]
+    padded = []
+    for p, l, m in zip(planes, in_levels, in_margins):
+        p3 = jnp.asarray(p).reshape((-1,) + p.shape[-2:])
+        padded.append(_periodic_pad(p3, m, hp2 >> (l + 1), wp2 >> (l + 1)))
+    nb = padded[0].shape[0]
+    grid = (nb, hp2 // bh, wp2 // bw)
+
+    def kernel(*refs):
+        x_refs = refs[:n_in]
+        o_ref = refs[n_in]
+        scratch = refs[n_in + 1:2 * n_in + 1]
+        sems = refs[-1]
+        t, slot, cur_ids, t1, slot1, nxt_ids, total = _pipeline_ids(grid)
+
+        def dmas(slot, ids):
+            bb, ii, jj = ids
+            return [pltpu.make_async_copy(
+                x_refs[k].at[bb, pl.ds(ii * cores[k][0], wins[k][0]),
+                             pl.ds(jj * cores[k][1], wins[k][1])],
+                scratch[k].at[slot],
+                sems.at[slot, k],
+            ) for k in range(n_in)]
+
+        @pl.when(t == 0)
+        def _():
+            for cp in dmas(slot, cur_ids):
+                cp.start()
+
+        @pl.when(t1 < total)
+        def _():
+            for cp in dmas(slot1, nxt_ids):
+                cp.start()
+
+        for cp in dmas(slot, cur_ids):
+            cp.wait()
+        cur = scratch[0][slot].astype(compute_dtype)
+        for l in range(levels - 1, -1, -1):
+            xs = [cur] + [scratch[1 + 3 * l + d][slot].astype(compute_dtype)
+                          for d in range(3)]
+            ys = _run_level_window(steps, programs[l] if programs else None,
+                                   xs, sched.shrinks[l], compute_dtype)
+            cur = _interleave(ys)
+            if l > 0 and cur.dtype != out_dtype:
+                cur = cur.astype(out_dtype).astype(compute_dtype)
+        o_ref[0, :, :] = cur.astype(out_dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY) for _ in range(n_in)],
+        out_specs=pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, hp2, wp2), out_dtype),
+        scratch_shapes=[pltpu.VMEM((2,) + wn, out_dtype) for wn in wins]
+        + [pltpu.SemaphoreType.DMA((2, n_in))],
+        interpret=interpret,
+    )(*padded)
+    return out[:, :h, :w].reshape(batch + (h, w))
+
+
+def pyramid_vmem_bytes(levels: int, win_shapes: Sequence[Tuple[int, int]],
+                       itemsize: int, compute_itemsize: int = 4) -> int:
+    """Rough VMEM footprint of one fused-pyramid kernel instance: the
+    double-buffered input window scratch plus ~3 finest-window-sized
+    compute intermediates (the split planes, the level outputs, and the
+    live LL carry)."""
+    io = 2 * sum(wh * ww for wh, ww in win_shapes) * itemsize
+    wh0, ww0 = max(win_shapes, key=lambda s: s[0] * s[1])
+    return io + 3 * wh0 * ww0 * compute_itemsize
+
+
+# ---------------------------------------------------------------------------
 # Analytic HBM-traffic model (used by the roofline benchmarks)
 # ---------------------------------------------------------------------------
 
 def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
                      itemsize: int, fuse: str = "none",
                      block: Tuple[int, int] = (256, 512),
-                     programs: Optional[Sequence] = None) -> int:
-    """Ideal HBM bytes moved by the kernel sequence on a (H, W) image.
+                     programs: Optional[Sequence] = None,
+                     split_merge: bool = True) -> int:
+    """Ideal HBM bytes moved by one transform level on a (H, W) image.
 
     Per pallas_call: read 4 planes (block+halo windows, overlap counted)
     + write 4 planes.  When ``_pick_block`` pads a non-smooth plane dim,
@@ -293,6 +614,13 @@ def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
     moves.  The halo-only wrap copy on *unpadded* planes is still
     excluded — production kernels fold it into wrapped corner DMAs; it
     is identical across schemes and does not change the comparison.
+
+    ``split_merge`` counts the polyphase deinterleave (``to_planes``,
+    forward) / reinterleave (``from_planes``, inverse) that every
+    non-pyramid plan actually pays per transform: one extra read + write
+    of the full image, as a separate XLA gather/scatter pass outside the
+    kernels.  The fused-pyramid kernel splits/merges in-VMEM and is
+    modelled by :func:`pyramid_hbm_bytes`, which omits it.
 
     ``programs`` (one compiled tap program per call group) narrows the
     halo to the compiled per-axis margin when available.
@@ -319,4 +647,49 @@ def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
             read += 4 * hp2 * wp2
             write += 4 * hp * wp
         total += (read + write) * itemsize
+    if split_merge:
+        # to_planes / from_planes: read the interleaved image, write the
+        # four planes (or vice versa) — once per transform
+        total += 2 * h * w * itemsize
     return total
+
+
+def pyramid_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
+                      itemsize: int, levels: int, fuse: str = "pyramid",
+                      block: Tuple[int, int] = (256, 512),
+                      programs: Optional[Sequence] = None) -> int:
+    """Ideal HBM bytes of one multi-level forward transform per fuse mode.
+
+    ``fuse in ("none", "scheme", "levels")`` sums the per-level model of
+    :func:`scheme_hbm_bytes` (including the per-level deinterleave pass
+    — the LL plane round-trips through HBM between levels).  ``fuse ==
+    "pyramid"`` models the megakernel: the padded interleaved image is
+    materialized once, each grid block reads one compound-halo window
+    (overlap counted), and every subband is written exactly once — no
+    split/merge passes and no inter-level LL traffic at all.
+    """
+    h, w = shape
+    if fuse != "pyramid":
+        kfuse = "none" if fuse == "none" else "scheme"
+        return sum(scheme_hbm_bytes(steps, (h >> l, w >> l), itemsize,
+                                    fuse=kfuse, block=block,
+                                    programs=programs)
+                   for l in range(levels))
+    reaches = C.level_reaches(steps, programs, levels)
+    sched = C.forward_schedule(reaches, levels)
+    align = 1 << levels
+    bh, hp2 = _pick_block_aligned(h, 2 * block[0], align)
+    bw, wp2 = _pick_block_aligned(w, 2 * block[1], align)
+    M = sched.margins[0]
+    # padded-image materialization: read the image, write the padded copy
+    total = h * w + (hp2 + 2 * M) * (wp2 + 2 * M)
+    # one compound-halo window read per block; every subband written once
+    total += (hp2 // bh) * (wp2 // bw) * (bh + 2 * M) * (bw + 2 * M)
+    out_levels = pyramid_out_levels(levels)
+    outs = [(hp2 >> (l + 1)) * (wp2 >> (l + 1)) for l in out_levels]
+    total += sum(outs)
+    if (hp2, wp2) != (h, w):
+        # padded outputs are sliced back to the true subband dims
+        total += sum(outs)
+        total += sum((h >> (l + 1)) * (w >> (l + 1)) for l in out_levels)
+    return total * itemsize

@@ -21,7 +21,7 @@ def forward(x: jax.Array, wavelet: str = "cdf97", *, optimize: bool = False,
             tap_opt: str = "full"):
     sch = (O.build_optimized(wavelet, SCHEME) if optimize
            else S.build_scheme(wavelet, SCHEME))
-    kfuse = "scheme" if fuse in ("scheme", "levels") else fuse
+    kfuse = "scheme" if fuse in ("scheme", "levels", "pyramid") else fuse
     programs = (None if tap_opt == "off" else C.compile_scheme_programs(
         wavelet, SCHEME, optimize, False, tap_opt, kfuse))
     return PP.apply_steps_pallas(PP.steps_of(sch), S.to_planes(x),

@@ -6,7 +6,10 @@ from the plan's compiled tap programs, the exchange layer
 (:mod:`repro.tiling.exchange`) materializes ``core + halo`` windows, and
 every window then runs through an ordinary *monolithic* window plan —
 fetched from the same LRU plan cache, with the tile axis stacked onto
-the batch dims so the whole grid is one batched execution.  Because the
+the batch dims so the whole grid is one batched execution.  The window
+plan inherits the fuse mode, so ``fuse="pyramid"`` runs every tile
+window through the fused-pyramid megakernel: the entire tiled
+multi-level transform is a single ``pallas_call``.  Because the
 window transform executes the very same compiled programs elementwise,
 tile cores are bit-identical to the monolithic transform at
 ``tap_opt="off"``/``"exact"`` (and equal to fp tolerance at ``"full"``).

@@ -228,7 +228,10 @@ def test_hbm_bytes_count_padded_plane_traffic():
     for st in steps:
         rr = C.compile_steps((st,), "full").halo
         extra += 4 * (hp * hp + (hp2 + 2 * rr) ** 2 + hp2 * hp2 + hp * hp)
-    assert prime == base + extra * 4
+    # the deinterleave pass scales with the true image size, so the two
+    # shapes carry different split traffic
+    split_diff = 2 * (2038 ** 2 - (2 * hp2) ** 2)
+    assert prime == base + (extra + split_diff) * 4
     assert prime > smooth
 
 

@@ -1,0 +1,295 @@
+"""Fused-pyramid megakernel: fuse-mode parity, schedules, VMEM fallback.
+
+Parity policy (mirrors the tiling subsystem's findings): the eager jnp
+path is the bit-identity reference — ``fuse="pyramid"`` on the jnp
+backend runs the very same eager per-level chain as ``fuse="none"`` and
+must match it bit for bit at every ``tap_opt`` level.  The pallas path
+runs under jit/XLA, whose elementwise FMA contraction is shape-dependent,
+so the megakernel is compared fp-tolerantly against both the jnp
+reference and the per-level pallas kernels (the established engine
+tolerances).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import compiler as C
+from repro import engine as E
+from repro.core import transform as T
+from repro.core.schemes import SCHEMES
+from repro.kernels import polyphase as PP
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _assert_pyramids_equal(a, b, exact=True, **tol):
+    pairs = [(a.ll, b.ll)]
+    for da, db in zip(a.details, b.details):
+        pairs += list(zip(da, db))
+    for u, v in pairs:
+        if exact:
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+        else:
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v), **tol)
+
+
+# ---------------------------------------------------------------------------
+# Margin schedules (the phase-alignment algebra)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("levels", (1, 2, 3, 4))
+def test_forward_schedule_invariants(levels):
+    for reach in (1, 2, 3, 4, 5):
+        s = C.forward_schedule((reach,) * levels, levels)
+        # every level can compute its outputs
+        assert all(sh >= r for sh, r in zip(s.shrinks, s.reaches))
+        # shrink alignment: s_l = 0 mod 2^(L-1-l) (split phase alignment)
+        for l, sh in enumerate(s.shrinks):
+            assert sh % (1 << (levels - 1 - l)) == 0
+        # compound margin is 2^L-aligned and margins telescope exactly
+        assert s.margins[0] % (1 << levels) == 0
+        for l in range(levels):
+            assert s.margins[l + 1] == s.margins[l] // 2 - s.shrinks[l]
+            if l < levels:
+                assert s.margins[l] % 2 == 0
+        assert s.margins[levels] >= 0
+        assert s.halo == s.margins[0] == \
+            sum((1 << (l + 1)) * sh for l, sh in enumerate(s.shrinks))
+
+
+@pytest.mark.parametrize("levels", (1, 2, 3, 4))
+def test_inverse_schedule_invariants(levels):
+    for reach in (1, 2, 3, 4, 5):
+        s = C.inverse_schedule((reach,) * levels, levels)
+        assert all(sh >= r for sh, r in zip(s.shrinks, s.reaches))
+        assert s.margins[0] == 0          # reconstructed core needs none
+        for l in range(levels):
+            # g_l = 2 * (g_{l+1} - s_l): margins stay integral/even
+            assert s.margins[l] == 2 * (s.margins[l + 1] - s.shrinks[l])
+        assert s.halo == s.margins[-1]
+
+
+def test_level_reaches_shapes():
+    steps = E.scheme_steps("cdf97", "sep-lifting", False, False)
+    assert C.level_reaches(steps, None, 2) == \
+        (sum(st.halo for st in steps),) * 2
+    whole = C.compile_scheme_programs("cdf97", "sep-lifting", False, False,
+                                      "full", "scheme")
+    assert C.level_reaches(steps, whole, 3) == (whole[0].halo,) * 3
+    per_step = C.compile_scheme_programs("cdf97", "sep-lifting", False,
+                                         False, "full", "none")
+    assert C.level_reaches(steps, per_step, 3) == \
+        (sum(p.halo for p in per_step),) * 3
+
+
+def test_pick_block_aligned():
+    b, npad = PP._pick_block_aligned(96, 512, 4)     # clamp to image
+    assert (b, npad) == (96, 96)
+    b, npad = PP._pick_block_aligned(1024, 512, 8)   # exact divisor
+    assert (b, npad) == (512, 1024)
+    b, npad = PP._pick_block_aligned(1048, 512, 8)   # 1048 = 8 * 131
+    assert b % 8 == 0 and npad % b == 0 and npad >= 1048
+
+
+# ---------------------------------------------------------------------------
+# Fuse-mode parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("tap_opt", ("off", "exact", "full"))
+def test_jnp_pyramid_bit_identical_to_none(scheme, tap_opt):
+    """jnp fuse="pyramid" == eager fuse="none" reference, bit for bit."""
+    x = _rand((24, 40), seed=1)                       # odd plane dims
+    for levels in (1, 3):
+        a = T.dwt2(x, wavelet="cdf97", levels=levels, scheme=scheme,
+                   fuse="none", tap_opt=tap_opt)
+        b = T.dwt2(x, wavelet="cdf97", levels=levels, scheme=scheme,
+                   fuse="pyramid", tap_opt=tap_opt)
+        _assert_pyramids_equal(a, b, exact=True)
+        xr = T.idwt2(b, wavelet="cdf97", scheme=scheme, fuse="pyramid",
+                     tap_opt=tap_opt)
+        xr0 = T.idwt2(a, wavelet="cdf97", scheme=scheme, fuse="none",
+                      tap_opt=tap_opt)
+        np.testing.assert_array_equal(np.asarray(xr), np.asarray(xr0))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_pallas_pyramid_matches_reference(scheme):
+    """The megakernel (single pallas_call) vs the eager jnp reference and
+    the per-level pallas kernels, two levels, fp tolerance."""
+    x = _rand((32, 48), seed=2)
+    ref = T.dwt2(x, wavelet="cdf97", levels=2, scheme=scheme)
+    pyr = T.dwt2(x, wavelet="cdf97", levels=2, scheme=scheme,
+                 backend="pallas", fuse="pyramid")
+    _assert_pyramids_equal(ref, pyr, exact=False, **TOL)
+    lvl = T.dwt2(x, wavelet="cdf97", levels=2, scheme=scheme,
+                 backend="pallas", fuse="levels")
+    _assert_pyramids_equal(lvl, pyr, exact=False, **TOL)
+    xr = T.idwt2(pyr, wavelet="cdf97", scheme=scheme, backend="pallas",
+                 fuse="pyramid")
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("tap_opt", ("off", "exact"))
+def test_pallas_pyramid_tap_levels_and_odd_shape(tap_opt):
+    """tap_opt off/exact walk the raw matrices / unreassociated program;
+    both must agree with the jnp reference on odd/prime plane dims."""
+    x = _rand((24, 40), seed=3)                       # 12x20 planes
+    ref = T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv",
+                 tap_opt=tap_opt)
+    pyr = T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv",
+                 backend="pallas", fuse="pyramid", tap_opt=tap_opt)
+    _assert_pyramids_equal(ref, pyr, exact=False, **TOL)
+    xr = T.idwt2(pyr, wavelet="cdf97", scheme="ns-polyconv",
+                 backend="pallas", fuse="pyramid", tap_opt=tap_opt)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_pallas_pyramid_batched():
+    """(B, C, H, W) input rides the leading grid dimension."""
+    x = _rand((2, 2, 32, 32), seed=4)
+    ref = T.dwt2(x, wavelet="cdf97", levels=2, scheme="sep-lifting")
+    pyr = T.dwt2(x, wavelet="cdf97", levels=2, scheme="sep-lifting",
+                 backend="pallas", fuse="pyramid")
+    assert pyr.ll.shape == (2, 2, 8, 8)
+    _assert_pyramids_equal(ref, pyr, exact=False, **TOL)
+    xr = T.idwt2(pyr, wavelet="cdf97", scheme="sep-lifting",
+                 backend="pallas", fuse="pyramid")
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_pallas_pyramid_multiblock_grid():
+    """A small explicit block target forces a real multi-block grid, so
+    the double-buffered window pipeline crosses block and batch
+    boundaries; halos must still be exact."""
+    key = E.PlanKey(wavelet="cdf97", scheme="ns-polyconv", levels=2,
+                    shape=(2, 32, 64), dtype="float32", backend="pallas",
+                    optimize=False, fuse="pyramid", boundary="periodic")
+    plan = E.build_plan(key, block_target=(8, 16))
+    assert plan.pyramid is not None
+    assert plan.pyramid.block == (16, 32)
+    assert plan.pallas_calls == 1
+    x = _rand((2, 32, 64), seed=5)
+    pyr = plan.execute(x)
+    ref = T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv")
+    _assert_pyramids_equal(ref, pyr, exact=False, **TOL)
+    xr = plan.execute_inverse(pyr)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_tiled_plan_selects_pyramid_kernel():
+    """``tiles=`` + ``fuse="pyramid"``: every tile window runs through
+    the megakernel (the stacked window plan inherits the fuse mode)."""
+    x = _rand((64, 96), seed=6)
+    ref = T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv")
+    tp = T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv",
+                backend="pallas", fuse="pyramid", tiles=(32, 32))
+    _assert_pyramids_equal(ref, tp, exact=False, **TOL)
+    # the window plan behind the tiled plan is a real pyramid plan
+    plan = E.get_plan(wavelet="cdf97", scheme="ns-polyconv", levels=2,
+                      shape=(64, 96), dtype="float32", backend="pallas",
+                      fuse="pyramid", tiles=(32, 32))
+    wshape = (plan.grid.count,) + plan.grid.window_shape
+    wplan = E.get_plan(wavelet="cdf97", scheme="ns-polyconv", levels=2,
+                       shape=wshape, dtype="float32", backend="pallas",
+                       fuse="pyramid")
+    assert wplan.pyramid is not None and wplan.pallas_calls == 1
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget fallback + observability
+# ---------------------------------------------------------------------------
+
+def test_vmem_guard_falls_back_to_levels(monkeypatch):
+    from repro.engine import plan as P
+    monkeypatch.setenv(P.PYRAMID_VMEM_LIMIT_ENV, "1024")  # absurdly small
+    before = P.COUNTERS["vmem_fallbacks"]
+    key = E.PlanKey(wavelet="cdf97", scheme="ns-polyconv", levels=2,
+                    shape=(32, 48), dtype="float32", backend="pallas",
+                    optimize=False, fuse="pyramid", boundary="periodic")
+    plan = E.build_plan(key)
+    assert plan.pyramid is None
+    assert plan.fallback and "VMEM" in plan.fallback
+    assert P.COUNTERS["vmem_fallbacks"] == before + 1
+    # fallback executes as fuse="levels" and stays correct
+    assert plan.pallas_calls == 2
+    x = _rand((32, 48), seed=7)
+    ref = T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv")
+    pyr = plan.execute(x)
+    _assert_pyramids_equal(ref, pyr, exact=False, **TOL)
+
+
+def test_pyramid_counters_and_stats():
+    from repro.engine import plan as P
+    x = _rand((32, 32), seed=8)
+    before = P.COUNTERS["pyramid_kernel_launches"]
+    T.dwt2(x, wavelet="cdf97", levels=2, scheme="ns-polyconv",
+           backend="pallas", fuse="pyramid")
+    assert P.COUNTERS["pyramid_kernel_launches"] == before + 1
+    st = E.stats()
+    assert st["pyramid"]["pyramid_kernel_launches"] == before + 1
+    rows = [r for r in st["plans"] if r["fuse"] == "pyramid"
+            and r["shape"] == (32, 32)]
+    assert rows and "pyramid_window" in rows[0]
+    assert rows[0]["pallas_calls"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HBM model + autotuned block table
+# ---------------------------------------------------------------------------
+
+def test_pyramid_hbm_below_levels_every_scheme():
+    """The acceptance gate: fewer modelled bytes than per-level kernels
+    for every scheme at 3 levels."""
+    for scheme in SCHEMES:
+        steps = E.scheme_steps("cdf97", scheme, False, False)
+        progs = C.compile_scheme_programs("cdf97", scheme, False, False,
+                                          "full", "scheme")
+        lv = PP.pyramid_hbm_bytes(steps, (4096, 4096), 4, 3, fuse="levels",
+                                  programs=progs)
+        py = PP.pyramid_hbm_bytes(steps, (4096, 4096), 4, 3, fuse="pyramid",
+                                  programs=progs)
+        assert py < lv, (scheme, py, lv)
+
+
+def test_hbm_split_merge_traffic_counted():
+    steps = E.scheme_steps("cdf97", "ns-conv", False, False)
+    with_sm = PP.scheme_hbm_bytes(steps, (2048, 2048), 4)
+    without = PP.scheme_hbm_bytes(steps, (2048, 2048), 4,
+                                  split_merge=False)
+    # the deinterleave pass: one read + one write of the full image
+    assert with_sm - without == 2 * 2048 * 2048 * 4
+
+
+def test_block_table_consulted(monkeypatch, tmp_path):
+    from repro.engine import autotune as AT
+    path = tmp_path / "blocks.json"
+    monkeypatch.setenv(AT.TABLE_ENV, str(path))
+    AT.clear_cache()
+    key = E.PlanKey(wavelet="cdf97", scheme="ns-polyconv", levels=1,
+                    shape=(256, 256), dtype="float32", backend="pallas",
+                    optimize=False, fuse="scheme", boundary="periodic")
+    # no table -> static default target (256, 512) clamps to the plane
+    plan = E.build_plan(key)
+    assert plan.level_specs[0].block == (128, 128)
+    # tuned entry wins
+    AT.save_entry("ns-polyconv", (256, 256), "scheme", "pallas", (32, 64))
+    assert AT.lookup("ns-polyconv", (256, 256), "scheme", "pallas") \
+        == (32, 64)
+    from repro.engine.plan import _pick_block
+    assert _pick_block(key) == (32, 64)
+    plan2 = E.build_plan(key)
+    assert plan2.level_specs[0].block == (32, 64)
+    # an explicit target bypasses the table (the autotuner's sweep path)
+    plan3 = E.build_plan(key, block_target=(16, 16))
+    assert plan3.level_specs[0].block == (16, 16)
+    AT.clear_cache()

@@ -94,13 +94,16 @@ def test_transform_pallas_backend():
 
 def test_hbm_bytes_model_step_scaling():
     """steps halve -> HBM round trips halve (the paper's TPU translation);
-    fusion collapses every scheme to ~one round trip."""
+    fusion collapses every scheme to ~one round trip.  The model also
+    counts the polyphase deinterleave pass every plan pays (~one extra
+    round-trip-equivalent per transform), which compresses the
+    between-scheme ratios: 1 vs 2 kernel passes becomes ~2 vs ~3."""
     shape = (2048, 2048)
     sep = K.scheme_stats("cdf97", "sep-conv", False, shape)
     ns = K.scheme_stats("cdf97", "ns-conv", False, shape)
     lift = K.scheme_stats("cdf97", "sep-lifting", False, shape)
     fused = K.scheme_stats("cdf97", "sep-lifting", False, shape,
                            fuse="scheme")
-    assert ns["hbm_bytes"] < 0.55 * sep["hbm_bytes"]
+    assert ns["hbm_bytes"] < 0.70 * sep["hbm_bytes"]
     assert lift["hbm_bytes"] > 3.5 * ns["hbm_bytes"]
     assert fused["hbm_bytes"] < 1.15 * ns["hbm_bytes"]
