@@ -85,6 +85,40 @@ def fuse_mode_hbm(shape=(4096, 4096), levels: int = 3,
     return rows
 
 
+def xla_conv_summary(wavelet: str = "cdf97", shape=(4096, 4096),
+                     itemsize: int = 4):
+    """The barrier-count story on the third backend: grouped-conv calls
+    per level (= the scheme's step count under ``fuse="none"``, one
+    fused conv under ``fuse="scheme"``), the composed filter-bank
+    support and nonzero taps (the arithmetic the conv emitter executes),
+    and the model HBM bytes of the conv path
+    (``scheme_hbm_bytes(..., backend="xla")``).  ns-\\* schemes halve the
+    conv launches exactly as they halve the pallas barriers."""
+    from repro import compiler as C
+    from repro.compiler import conv as CV
+    from repro.engine.plan import scheme_steps
+    from repro.kernels import polyphase as PP
+    print(f"# xla grouped-conv executor: {shape[0]}x{shape[1]} f32 "
+          f"({wavelet})")
+    print("scheme,fuse,convs_per_level,kernel,taps,hbm_MB")
+    rows = []
+    for sc in S.SCHEMES:
+        steps = scheme_steps(wavelet, sc, False, False)
+        for fuse in ("none", "scheme"):
+            progs = C.compile_scheme_programs(wavelet, sc, False, False,
+                                              "full", fuse)
+            cst = CV.conv_stats([CV.lower_program_to_conv(p)
+                                 for p in progs])
+            hbm = PP.scheme_hbm_bytes(steps, shape, itemsize, fuse=fuse,
+                                      programs=progs, backend="xla")
+            rows.append({"scheme": sc, "fuse": fuse, **cst,
+                         "hbm_bytes": hbm})
+            print(f"{sc},{fuse},{cst['convs']},"
+                  f"{cst['kernel'][0]}x{cst['kernel'][1]},{cst['taps']},"
+                  f"{hbm/1e6:.1f}")
+    return rows
+
+
 def main():
     print("# DWT kernel roofline on v5e (4096x4096 f32 image)")
     print("wavelet,scheme,variant,steps,pallas_calls,ops_raw,ops_compiled,"
@@ -116,8 +150,11 @@ def main():
     print()
     fuse_rows = fuse_mode_hbm()
     print()
+    xla_rows = xla_conv_summary()
+    print()
     plans = engine_plan_summary()
-    return {"roofline": rows, "fuse_modes": fuse_rows, "plans": plans}
+    return {"roofline": rows, "fuse_modes": fuse_rows, "xla": xla_rows,
+            "plans": plans}
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH] \
+        [--backends jnp,pallas,xla]
 
 Sections:
   1. table1   — paper Table 1 (steps + operation counts), exact-match vs
@@ -21,22 +22,39 @@ machine-readable document (throughput numbers, op counts, and the
 op-count regression verdict), for CI trend tracking:
 
     PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_2.json
+
+``--backends`` limits the *measured* backends to a comma-separated
+subset of the registered ones (the analytic sections are
+backend-independent and always run); e.g. ``--backends xla`` is the CI
+smoke for the grouped-conv executor.
 """
 import json
 import sys
 import time
 
 
+def _flag_value(name):
+    if name not in sys.argv:
+        return None
+    i = sys.argv.index(name)
+    if i + 1 >= len(sys.argv):
+        raise SystemExit(f"{name} requires an argument")
+    return sys.argv[i + 1]
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
-    json_path = None
-    if "--json" in sys.argv:
-        i = sys.argv.index("--json")
-        if i + 1 >= len(sys.argv):
-            raise SystemExit("--json requires a path argument")
-        json_path = sys.argv[i + 1]
+    json_path = _flag_value("--json")
+    from repro import engine
+    backends = _flag_value("--backends")
+    backends = (engine.available_backends() if backends is None
+                else tuple(backends.split(",")))
+    unknown = set(backends) - set(engine.available_backends())
+    if unknown:
+        raise SystemExit(f"unknown backends {sorted(unknown)}; registered: "
+                         f"{engine.available_backends()}")
     t0 = time.time()
-    doc = {"quick": quick}
+    doc = {"quick": quick, "backends": list(backends)}
 
     from benchmarks import table1_ops
     print("=" * 72)
@@ -56,15 +74,16 @@ def main() -> None:
     print("=" * 72)
     doc["engine"] = throughput.engine_throughput(
         batch_sizes=(1, 8) if quick else (1, 8, 32),
-        reps=3 if quick else 5)
+        reps=3 if quick else 5, backends=backends)
 
     print("=" * 72)
     doc["tiling"] = throughput.tiled_throughput(
         n=256 if quick else 512, tile=64 if quick else 128)
 
-    print("=" * 72)
-    doc["pyramid"] = throughput.pyramid_throughput(
-        n=32 if quick else 64, batch=2 if quick else 4)
+    if "pallas" in backends:
+        print("=" * 72)
+        doc["pyramid"] = throughput.pyramid_throughput(
+            n=32 if quick else 64, batch=2 if quick else 4)
 
     print("=" * 72)
     from benchmarks import kernel_bench

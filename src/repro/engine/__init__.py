@@ -1,10 +1,15 @@
 """Plan/executor engine: batched, multi-level, cached DWT execution.
 
 Separates *what* to compute (the scheme algebra of ``repro.core``) from
-*how* to execute it (compiled, cached, batched plans over the jnp and
-Pallas backends).  ``repro.core.transform.dwt2`` / ``idwt2`` are thin
-wrappers over this package.
+*how* to execute it (compiled, cached, batched plans over the registered
+backends — see :mod:`repro.engine.backends` for the registry and the
+built-in ``jnp`` / ``pallas`` / ``xla`` backends).
+``repro.core.transform.dwt2`` / ``idwt2`` are thin wrappers over this
+package.
 """
+from repro.engine.backends import (Backend, BackendError,
+                                   available_backends, capability_matrix,
+                                   get_backend, register_backend)
 from repro.engine.cache import (PlanCache, clear_plan_cache, get_plan,
                                 global_cache, plan_cache_stats, stats)
 from repro.engine.plan import (COUNTERS, DwtPlan, LevelSpec, PlanKey,
@@ -16,4 +21,6 @@ __all__ = [
     "build_plan", "scheme_steps", "PlanCache", "get_plan", "global_cache",
     "plan_cache_stats", "clear_plan_cache", "stats", "COUNTERS",
     "pyramid_vmem_limit",
+    "Backend", "BackendError", "register_backend", "get_backend",
+    "available_backends", "capability_matrix",
 ]

@@ -76,7 +76,30 @@ def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
              compute_dtype: str = "float32", tap_opt: str = "full",
              tiles: Optional[Tuple[int, int]] = None,
              cache: Optional[PlanCache] = None) -> DwtPlan:
-    """Fetch (or build) the plan for one transform configuration."""
+    """Fetch (or build) the plan for one transform configuration.
+
+    The engine's front door: normalizes the arguments into a
+    :class:`~repro.engine.plan.PlanKey` and returns the shared
+    :class:`~repro.engine.plan.DwtPlan`, building one only on a miss.
+    ``cache=None`` uses the process-global LRU; pass an explicit
+    :class:`PlanCache` for isolation (tests, autotuning sweeps).
+
+    >>> from repro.engine import PlanCache, get_plan
+    >>> cache = PlanCache()
+    >>> plan = get_plan(shape=(8, 64, 64), levels=2, scheme="ns-polyconv",
+    ...                 backend="xla", fuse="none", cache=cache)
+    >>> plan.num_steps                  # 2 barrier steps/level x 2 levels
+    4
+    >>> plan.pallas_calls               # xla: one grouped conv per step
+    4
+    >>> plan.backend.name
+    'xla'
+    >>> get_plan(shape=(8, 64, 64), levels=2, scheme="ns-polyconv",
+    ...          backend="xla", fuse="none", cache=cache) is plan
+    True
+    >>> cache.stats()["hits"], cache.stats()["misses"]
+    (1, 1)
+    """
     key = PlanKey(wavelet=wavelet, scheme=scheme, levels=int(levels),
                   shape=tuple(int(d) for d in shape), dtype=str(dtype),
                   backend=backend, optimize=bool(optimize), fuse=fuse,
@@ -99,9 +122,19 @@ def clear_plan_cache() -> None:
 def stats() -> dict:
     """Engine-wide observability summary: plan-cache hit/miss counters,
     fused-pyramid counters (kernel launches, VMEM-budget fallbacks),
-    plus one row per cached plan (steps, kernel launches, compiled
-    tap-program op counts, tile counts, pyramid window geometry) — what
-    benchmarks and production dashboards need to see at a glance."""
+    the registered-backend capability matrix, plus one row per cached
+    plan (steps, kernel launches, compiled tap-program op counts, tile
+    counts, pyramid window geometry) — what benchmarks and production
+    dashboards need to see at a glance.
+
+    >>> from repro import engine
+    >>> s = engine.stats()
+    >>> sorted(s)
+    ['backends', 'plan_cache', 'plans', 'pyramid']
+    >>> [row["backend"] for row in s["backends"]]
+    ['jnp', 'pallas', 'xla']
+    """
+    from repro.engine import backends as B
     from repro.engine import plan as P
     with _GLOBAL._lock:
         items = list(_GLOBAL._plans.items())
@@ -131,4 +164,4 @@ def stats() -> dict:
             row["fallback"] = plan.fallback
         plans.append(row)
     return {"plan_cache": _GLOBAL.stats(), "pyramid": dict(P.COUNTERS),
-            "plans": plans}
+            "backends": list(B.capability_matrix()), "plans": plans}

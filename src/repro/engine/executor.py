@@ -1,18 +1,21 @@
-"""Plan executors: *how* a :class:`~repro.engine.plan.DwtPlan` runs.
+"""Per-level executor arithmetic: *how one pyramid level runs* on each
+registered backend.
 
-Both backends accept batched ``(..., H, W)`` input end-to-end:
+This module holds the level-granularity building blocks — polyphase
+split/merge plus a StepSpec walk or compiled-tap-program run — that the
+backend objects in :mod:`repro.engine.backends` assemble into full plan
+executors.  The split of responsibilities:
 
-* ``jnp``    — the matrix application broadcasts over leading dims, so a
-  batch is free; under ``fuse="levels"`` the whole pyramid is one
-  ``jax.jit`` computation (levels chained inside the trace).
-* ``pallas`` — the polyphase kernel flattens leading dims into the leading
-  grid dimension of the ``pallas_call`` (no vmap round trips); per-level
-  dispatch is jitted per plan, and ``fuse="levels"`` chains all level
-  kernels in a single trace.
+* ``executor.py``  (here)  — level arithmetic: image -> 4 subband planes
+  (and back) for the jnp roll path, the Pallas window kernels, and the
+  XLA grouped-conv path, plus the fused-pyramid megakernel wrappers;
+* ``backends.py``          — dispatch policy: which fuse modes a backend
+  supports, how levels chain, what gets jitted, how launches are
+  counted.
 
-Numerics are identical to a per-image Python loop by construction: the
-kernels compute every image with the same per-block program, and the jnp
-path uses the same ops in the same order.
+All level functions accept batched ``(..., H, W)`` input: the jnp and
+conv paths broadcast over leading dims, the Pallas kernels flatten them
+into the leading grid dimension of the ``pallas_call``.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
+from repro.compiler import conv as CV
 from repro.compiler import execute as CX
 
 
@@ -41,7 +45,7 @@ def apply_steps_jnp(steps: Sequence[PP.StepSpec], planes: S.Planes
     return planes
 
 
-def _run_programs_jnp(programs, planes, compute_dtype):
+def run_programs_jnp(programs, planes, compute_dtype):
     """Execute compiled tap programs on full planes (periodic rolls),
     computing in ``compute_dtype`` and casting back to the I/O dtype."""
     out_dtype = planes[0].dtype
@@ -51,35 +55,27 @@ def _run_programs_jnp(programs, planes, compute_dtype):
     return tuple(p.astype(out_dtype) for p in cur)
 
 
-def _level_forward(x, spec, key):
+# ---------------------------------------------------------------------------
+# jnp backend: periodic rolls over whole planes
+# ---------------------------------------------------------------------------
+
+def jnp_level_forward(x, spec, key):
     """One forward level: image (..., H, W) -> 4 planes (..., H/2, W/2)."""
     planes = S.to_planes(x)
     cdt = jnp.dtype(key.compute_dtype)
-    if key.backend == "pallas":
-        return PP.apply_steps_pallas(
-            spec.fwd_steps, planes,
-            fuse=("none" if key.fuse == "none" else "scheme"),
-            block=spec.block, compute_dtype=cdt, tap_opt=key.tap_opt,
-            programs=spec.fwd_programs)
     if spec.fwd_programs is not None:
-        return _run_programs_jnp(spec.fwd_programs, planes, cdt)
+        return run_programs_jnp(spec.fwd_programs, planes, cdt)
     out_dtype = planes[0].dtype
     planes = tuple(p.astype(cdt) for p in planes)
     return tuple(p.astype(out_dtype)
                  for p in apply_steps_jnp(spec.fwd_steps, planes))
 
 
-def _level_inverse(planes, spec, key):
+def jnp_level_inverse(planes, spec, key):
     """One inverse level: 4 subband planes -> image (..., H, W)."""
     cdt = jnp.dtype(key.compute_dtype)
-    if key.backend == "pallas":
-        planes = PP.apply_steps_pallas(
-            spec.inv_steps, planes,
-            fuse=("none" if key.fuse == "none" else "scheme"),
-            block=spec.block, compute_dtype=cdt, tap_opt=key.tap_opt,
-            programs=spec.inv_programs)
-    elif spec.inv_programs is not None:
-        planes = _run_programs_jnp(spec.inv_programs, planes, cdt)
+    if spec.inv_programs is not None:
+        planes = run_programs_jnp(spec.inv_programs, planes, cdt)
     else:
         out_dtype = planes[0].dtype
         planes = tuple(p.astype(cdt) for p in planes)
@@ -87,6 +83,48 @@ def _level_inverse(planes, spec, key):
                        for p in apply_steps_jnp(spec.inv_steps, planes))
     return S.from_planes(planes)
 
+
+# ---------------------------------------------------------------------------
+# pallas backend: VMEM window kernels
+# ---------------------------------------------------------------------------
+
+def pallas_level_forward(x, spec, key):
+    planes = S.to_planes(x)
+    return PP.apply_steps_pallas(
+        spec.fwd_steps, planes,
+        fuse=("none" if key.fuse == "none" else "scheme"),
+        block=spec.block, compute_dtype=jnp.dtype(key.compute_dtype),
+        tap_opt=key.tap_opt, programs=spec.fwd_programs)
+
+
+def pallas_level_inverse(planes, spec, key):
+    planes = PP.apply_steps_pallas(
+        spec.inv_steps, planes,
+        fuse=("none" if key.fuse == "none" else "scheme"),
+        block=spec.block, compute_dtype=jnp.dtype(key.compute_dtype),
+        tap_opt=key.tap_opt, programs=spec.inv_programs)
+    return S.from_planes(planes)
+
+
+# ---------------------------------------------------------------------------
+# xla backend: grouped lax.conv_general_dilated over the polyphase planes
+# ---------------------------------------------------------------------------
+
+def xla_level_forward(x, spec, key):
+    planes = S.to_planes(x)
+    return CV.run_planes_conv(spec.fwd_programs, planes,
+                              jnp.dtype(key.compute_dtype))
+
+
+def xla_level_inverse(planes, spec, key):
+    planes = CV.run_planes_conv(spec.inv_programs, planes,
+                                jnp.dtype(key.compute_dtype))
+    return S.from_planes(planes)
+
+
+# ---------------------------------------------------------------------------
+# fused-pyramid megakernel (pallas only)
+# ---------------------------------------------------------------------------
 
 def _pyramid_kernel_kwargs(plan, inverse: bool) -> dict:
     key, spec = plan.key, plan.pyramid
@@ -128,79 +166,4 @@ def make_pyramid_inverse(plan):
         PLAN.COUNTERS["pyramid_kernel_launches"] += 1
         return fn(ll, tuple(details[::-1]))
 
-    return run
-
-
-def make_forward(plan):
-    """Build the forward executor: x -> (ll, details coarsest-first)."""
-    key = plan.key
-    specs = plan.level_specs
-
-    def run(x):
-        details = []
-        ll = x
-        for spec in specs:
-            ll, hl, lh, hh = _level_forward(ll, spec, key)
-            details.append((hl, lh, hh))
-        return ll, tuple(details[::-1])
-
-    if key.fuse == "pyramid":
-        if key.backend == "pallas" and plan.pyramid is not None:
-            return make_pyramid_forward(plan)
-        if key.backend == "jnp":
-            # eager per-level chain: bit-identical to fuse="none" (no
-            # kernel granularity to fuse on this backend)
-            return run
-        # VMEM-budget fallback: execute as fuse="levels"
-        return jax.jit(run)
-    if key.fuse == "levels":
-        # one trace for the whole pyramid: levels chain without returning
-        # to Python between them
-        return jax.jit(run)
-    if key.backend == "pallas":
-        # seed-granularity dispatch (one jitted call per level), but with
-        # plan-resolved steps/blocks instead of per-call rebuilds
-        fns = [jax.jit(functools.partial(_level_forward, spec=spec, key=key))
-               for spec in specs]
-
-        def run_jit(x):
-            details = []
-            ll = x
-            for fn in fns:
-                ll, hl, lh, hh = fn(ll)
-                details.append((hl, lh, hh))
-            return ll, tuple(details[::-1])
-
-        return run_jit
-    return run
-
-
-def make_inverse(plan):
-    """Build the inverse executor: (ll, details coarsest-first) -> x."""
-    key = plan.key
-    specs = plan.level_specs
-
-    def run(ll, details):
-        for spec, (hl, lh, hh) in zip(reversed(specs), details):
-            ll = _level_inverse((ll, hl, lh, hh), spec, key)
-        return ll
-
-    if key.fuse == "pyramid":
-        if key.backend == "pallas" and plan.pyramid is not None:
-            return make_pyramid_inverse(plan)
-        if key.backend == "jnp":
-            return run
-        return jax.jit(run)
-    if key.fuse == "levels":
-        return jax.jit(run)
-    if key.backend == "pallas":
-        fns = [jax.jit(functools.partial(_level_inverse, spec=spec, key=key))
-               for spec in specs]
-
-        def run_jit(ll, details):
-            for fn, (hl, lh, hh) in zip(reversed(fns), details):
-                ll = fn((ll, hl, lh, hh))
-            return ll
-
-        return run_jit
     return run

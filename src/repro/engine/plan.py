@@ -15,9 +15,10 @@ compiled executor callables.  Plans are cheap to hold and are shared
 through the LRU cache in :mod:`repro.engine.cache`, so repeated
 same-configuration calls have zero rebuild cost.
 
-Execution semantics (see :mod:`repro.engine.executor`):
+Execution semantics (see :mod:`repro.engine.backends` /
+:mod:`repro.engine.executor`):
 
-* both backends accept batched ``(..., H, W)`` input;
+* every registered backend accepts batched ``(..., H, W)`` input;
 * ``fuse="none"``   — paper-faithful: one barrier (pallas_call) per step;
 * ``fuse="scheme"`` — one pallas_call per level (compound halo);
 * ``fuse="levels"`` — the whole multi-level pyramid is a single traced
@@ -51,6 +52,7 @@ from repro.core import optimize as O
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
 from repro import compiler as C
+from repro.engine import backends as B
 
 FUSE_MODES = ("none", "scheme", "levels", "pyramid")
 BOUNDARIES = ("periodic",)
@@ -193,19 +195,19 @@ class DwtPlan:
         return sum(len(ls.fwd_steps) for ls in self.level_specs)
 
     @property
-    def pallas_calls(self) -> int:
-        """Kernel launches per execution under this plan's fuse mode.
+    def backend(self) -> "B.Backend":
+        """The registered :class:`~repro.engine.backends.Backend` object
+        this plan executes on."""
+        return B.get_backend(self.key.backend)
 
-        Zero for the jnp backend, which launches no kernels (its fuse
-        modes only control trace granularity).
-        """
-        if self.key.backend != "pallas":
-            return 0
-        if self.key.fuse == "none":
-            return self.num_steps
-        if self.key.fuse == "pyramid" and self.pyramid is not None:
-            return 1
-        return len(self.level_specs)
+    @property
+    def pallas_calls(self) -> int:
+        """Kernel launches per execution under this plan's fuse mode, as
+        modelled by the backend (:meth:`Backend.launches`): pallas_calls
+        on the Pallas backend, grouped-conv calls on the XLA backend,
+        zero on the jnp backend (its fuse modes only set trace
+        granularity)."""
+        return self.backend.launches(self)
 
     @property
     def tile_count(self) -> Optional[int]:
@@ -239,21 +241,24 @@ class DwtPlan:
 def _resolve_level(index: int, h: int, w: int, key: PlanKey,
                    fwd: Tuple[PP.StepSpec, ...],
                    inv: Tuple[PP.StepSpec, ...],
-                   block_target: Tuple[int, int]) -> LevelSpec:
+                   block_target: Tuple[int, int],
+                   backend: "B.Backend") -> LevelSpec:
     hp, wp = h // 2, w // 2
     bh, hp2 = PP._pick_block(hp, block_target[0])
     bw, wp2 = PP._pick_block(wp, block_target[1])
     fwd_programs = inv_programs = None
-    if key.tap_opt != "off":
-        # fuse granularity of the *kernel launches*: one program per step
-        # (fuse="none") or one whole-chain program per level; the jnp
-        # backend has no launch granularity and always runs whole-chain.
-        pfuse = key.fuse if key.backend == "pallas" else "scheme"
+    # the backend decides the tap-program compilation level (None = raw
+    # matrix walk) and the fuse granularity of its *launches*: one
+    # program per step (fuse="none") or one whole-chain program per
+    # level (the jnp backend has no launch granularity and always runs
+    # whole-chain; the xla backend lowers one conv per program).
+    opt = backend.program_opt(key)
+    if opt is not None:
+        pfuse = backend.program_fuse(key)
         fwd_programs = C.compile_scheme_programs(
-            key.wavelet, key.scheme, key.optimize, False, key.tap_opt,
-            pfuse)
+            key.wavelet, key.scheme, key.optimize, False, opt, pfuse)
         inv_programs = C.compile_scheme_programs(
-            key.wavelet, key.scheme, False, True, key.tap_opt, pfuse)
+            key.wavelet, key.scheme, False, True, opt, pfuse)
     if fwd_programs is not None:
         # compiled per-axis margins: never larger than the matrix halos
         halo = max(p.halo for p in fwd_programs)
@@ -343,9 +348,14 @@ def build_plan(key: PlanKey,
     ``block_target`` ``None`` consults the autotuned block table
     (:func:`_pick_block`) and falls back to the static ``(256, 512)``;
     an explicit value skips the table (the autotuner itself uses this).
+
+    Backend dispatch goes through the registry
+    (:mod:`repro.engine.backends`): unknown backends and unsupported
+    ``(backend, PlanKey)`` combinations raise
+    :class:`~repro.engine.backends.BackendError` here, at plan build,
+    with the offending PlanKey field named.
     """
-    if key.backend not in ("jnp", "pallas"):
-        raise ValueError(f"unknown backend {key.backend!r}")
+    backend = B.get_backend(key.backend)
     if key.fuse not in FUSE_MODES:
         raise ValueError(f"unknown fuse mode {key.fuse!r}; "
                          f"available: {FUSE_MODES}")
@@ -362,6 +372,7 @@ def build_plan(key: PlanKey,
         raise ValueError(f"input must be (..., H, W), got {key.shape}")
     if key.levels < 1:
         raise ValueError(f"levels must be >= 1, got {key.levels}")
+    backend.validate(key)
     h, w = key.shape[-2], key.shape[-1]
     validate_image_geometry(h, w, key.levels)
     if block_target is None:
@@ -372,9 +383,9 @@ def build_plan(key: PlanKey,
     specs = []
     for lvl in range(key.levels):
         specs.append(_resolve_level(lvl, h >> lvl, w >> lvl, key, fwd, inv,
-                                    block_target))
+                                    block_target, backend))
     plan = DwtPlan(key=key, level_specs=tuple(specs))
-    if key.fuse == "pyramid" and key.backend == "pallas" \
+    if key.fuse == "pyramid" and backend.pyramid_kernel \
             and key.tiles is None:
         plan.pyramid, plan.fallback = _resolve_pyramid(key, h, w,
                                                        block_target)
@@ -401,7 +412,6 @@ def build_plan(key: PlanKey,
         plan._inverse = _lazy(TA.make_tiled_inverse)
         return plan
 
-    from repro.engine import executor as E
-    plan._forward = E.make_forward(plan)
-    plan._inverse = E.make_inverse(plan)
+    plan._forward = backend.make_forward(plan)
+    plan._inverse = backend.make_inverse(plan)
     return plan

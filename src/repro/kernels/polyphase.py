@@ -602,8 +602,17 @@ def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
                      itemsize: int, fuse: str = "none",
                      block: Tuple[int, int] = (256, 512),
                      programs: Optional[Sequence] = None,
-                     split_merge: bool = True) -> int:
+                     split_merge: bool = True,
+                     backend: str = "pallas") -> int:
     """Ideal HBM bytes moved by one transform level on a (H, W) image.
+
+    ``backend="pallas"`` (default) models the window kernels below;
+    ``backend="xla"`` models the grouped-conv executor instead: per conv
+    (= per barrier step under ``fuse="none"``, one fused conv under any
+    other mode) the four planes are periodically pre-padded by the
+    program halo (read the planes, write the padded copies) and the conv
+    reads the padded planes and writes the four outputs — no block
+    decomposition, the conv emitter tiles internally.
 
     Per pallas_call: read 4 planes (block+halo windows, overlap counted)
     + write 4 planes.  When ``_pick_block`` pads a non-smooth plane dim,
@@ -627,11 +636,28 @@ def scheme_hbm_bytes(steps: Sequence[StepSpec], shape: Tuple[int, int],
     """
     h, w = shape
     hp, wp = h // 2, w // 2
+    # any level-granularity fuse mode ("scheme"/"levels") is one fused
+    # launch per level; only "none" runs one launch per barrier step
+    groups = [[st] for st in steps] if fuse == "none" else [steps]
+    if backend == "xla":
+        total = 0
+        for gi, g in enumerate(groups):
+            r = (programs[gi].halo if programs is not None
+                 else sum(st.halo for st in g))
+            # periodic pre-pad: read 4 planes, write 4 padded planes ...
+            read = 4 * hp * wp
+            write = 4 * (hp + 2 * r) * (wp + 2 * r)
+            # ... then the grouped conv reads them and writes 4 planes
+            read += 4 * (hp + 2 * r) * (wp + 2 * r)
+            write += 4 * hp * wp
+            total += (read + write) * itemsize
+        if split_merge:
+            total += 2 * h * w * itemsize
+        return total
     bh, hp2 = _pick_block(hp, block[0])
     bw, wp2 = _pick_block(wp, block[1])
     padded = (hp2, wp2) != (hp, wp)
     total = 0
-    groups = [steps] if fuse == "scheme" else [[st] for st in steps]
     for gi, g in enumerate(groups):
         if programs is not None:
             r = programs[gi].halo

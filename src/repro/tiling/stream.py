@@ -52,7 +52,23 @@ def stream_dwt2(image, *, wavelet: str = "cdf97", levels: int = 1,
                 compute_dtype: str = "float32", tap_opt: str = "full",
                 max_inflight: int = 2) -> Pyramid:
     """Multi-level forward DWT of a host-resident (H, W) image, streamed
-    band by band; returns a host (numpy) :class:`Pyramid`."""
+    band by band; returns a host (numpy) :class:`Pyramid`.
+
+    ``image`` is anything numpy can fancy-index — an ``np.ndarray`` or an
+    ``np.memmap`` over a file larger than device memory; at most
+    ``max_inflight`` tile-row bands of output are in flight on device.
+
+    >>> import numpy as np
+    >>> from repro.tiling import stream_dwt2
+    >>> img = np.arange(64.0 * 64, dtype=np.float32).reshape(64, 64)
+    >>> pyr = stream_dwt2(img, wavelet="cdf97", levels=2, tiles=(32, 32))
+    >>> type(pyr.ll).__name__, pyr.ll.shape      # host-resident result
+    ('ndarray', (16, 16))
+    >>> from repro.core import dwt2
+    >>> bool(np.allclose(pyr.ll, np.asarray(dwt2(img, levels=2).ll),
+    ...                  atol=1e-3))
+    True
+    """
     from repro import engine as E  # deferred: engine <-> tiling cycle
     if max_inflight < 1:
         raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
