@@ -2,13 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.autotune [--quick] [--out PATH]
         [--backend jnp|pallas] [--schemes a,b] [--shapes 512x512,...]
-        [--fuse none,scheme,levels,pyramid]
+        [--fuse none,scheme,levels,pyramid] [--no-store]
 
 Sweeps ``block=`` candidates per ``(scheme, shape, fuse, backend)``,
 measures steady-state wall time of a plan execution (after one warmup
 for compile), and persists each winner into the JSON block table that
 :func:`repro.engine.plan._pick_block` consults on every later plan
 build (``BLOCK_TABLE.json`` at the repo root, or ``$REPRO_BLOCK_TABLE``).
+Table entries are keyed by this machine's device fingerprint — a table
+tuned on one device never steers block shapes on another.
+
+Every measured candidate is also appended as a trace to the profiler
+store (``PROFILE_STORE.jsonl`` / ``$REPRO_PROFILE_STORE``), so an
+autotune sweep doubles as cost-model training data for
+``backend="auto"`` (:mod:`repro.profiler`); pass ``--no-store`` to
+skip that.
 
 Candidates are plane-space targets, matching the engine's static
 default ``(256, 512)``; the sweep builds plans directly (bypassing both
@@ -29,7 +37,8 @@ QUICK_CANDIDATES = ((128, 256), (256, 512))
 
 def _parse(argv):
     opts = {"quick": "--quick" in argv, "out": None, "backend": "pallas",
-            "schemes": None, "shapes": None, "fuse": None}
+            "schemes": None, "shapes": None, "fuse": None,
+            "store": "--no-store" not in argv}
     for flag, key in (("--out", "out"), ("--backend", "backend"),
                       ("--schemes", "schemes"), ("--shapes", "shapes"),
                       ("--fuse", "fuse")):
@@ -53,10 +62,15 @@ def measure(plan, x, reps: int = 3) -> float:
 
 
 def sweep(scheme: str, shape, fuse: str, backend: str, candidates,
-          wavelet: str = "cdf97", levels: int = 2, reps: int = 3):
+          wavelet: str = "cdf97", levels: int = 2, reps: int = 3,
+          store=None):
     """Measure every candidate block for one configuration; returns
-    ``(best_block, {block: seconds})``."""
+    ``(best_block, {block: seconds})``.  When ``store`` is a
+    :class:`repro.profiler.TraceStore`, every measurement is persisted
+    as a trace (block-annotated) for the ``backend="auto"`` cost
+    model."""
     from repro import engine as E
+    from repro import profiler as PF
     rng = np.random.default_rng(0)
     x = rng.standard_normal(shape).astype(np.float32)
     timings = {}
@@ -67,6 +81,14 @@ def sweep(scheme: str, shape, fuse: str, backend: str, candidates,
                         boundary="periodic")
         plan = E.build_plan(key, block_target=cand)  # bypass cache + table
         timings[cand] = measure(plan, x, reps)
+        if store is not None:
+            from repro.profiler.store import record_from_key
+            feats = PF.config_features(key, block=cand)
+            store.append(record_from_key(
+                key, cand, timings[cand], feats["hbm_bytes"],
+                feats["launches"],
+                meta={"plan_launches": plan.pallas_calls,
+                      **PF.runtime_meta()}))
     best = min(timings, key=timings.get)
     return best, timings
 
@@ -88,8 +110,14 @@ def main() -> dict:
                    else ("levels", "pyramid")))
     candidates = QUICK_CANDIDATES if opts["quick"] else CANDIDATES
     out = opts["out"] or str(AT.table_path())
+    store = None
+    if opts["store"]:
+        from repro import profiler as PF
+        store = PF.TraceStore()
 
-    print(f"# block autotuner: backend={backend} -> {out}")
+    print(f"# block autotuner: backend={backend} "
+          f"device={AT.device_fingerprint()} -> {out}"
+          + (f" (traces -> {store.path})" if store is not None else ""))
     print("scheme,shape,fuse,best_block,best_ms,default_ms")
     results = {}
     for scheme in schemes:
@@ -97,7 +125,8 @@ def main() -> dict:
             for fuse in fuses:
                 best, timings = sweep(scheme, shape, fuse, backend,
                                       candidates,
-                                      reps=2 if opts["quick"] else 3)
+                                      reps=2 if opts["quick"] else 3,
+                                      store=store)
                 AT.save_entry(scheme, shape, fuse, backend, best, path=out)
                 default_t = timings.get((256, 512))
                 default_ms = (f"{default_t*1e3:.2f}"

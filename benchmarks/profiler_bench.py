@@ -1,0 +1,154 @@
+"""Profile-guided auto-selection benchmark: warm, choose, verify.
+
+    PYTHONPATH=src python -m benchmarks.profiler_bench [--quick]
+        [--store PATH]
+
+For every cell of a small (scheme, shape) grid this:
+
+1. **warms the store** — measures every valid ``(backend, fuse)``
+   candidate through :func:`repro.profiler.warm_store` (this is what
+   populates ``PROFILE_STORE.jsonl`` / ``$REPRO_PROFILE_STORE``);
+2. **asks the auto selector** — ``backend="auto"`` must then resolve
+   from the measurements (``source == "store"``), and the config it
+   picks must be within 10% of the cell's best measured manual config
+   (the CI gate; with exact store hits the selector picks the measured
+   argmin, so a violation means the selection logic broke);
+3. **verifies end-to-end** — ``dwt2(..., backend="auto")`` output is
+   bit-identical to a manual call of the chosen configuration;
+4. **scores the cost model** — refits on the store and reports
+   predicted-vs-measured relative error per record (the number BENCH
+   artifacts trend across machines).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+QUICK_GRID = (("ns-polyconv", (2, 64, 64)),
+              ("sep-conv", (2, 64, 64)))
+FULL_GRID = QUICK_GRID + (("ns-conv", (2, 64, 64)),
+                          ("ns-polyconv", (2, 128, 128)))
+
+
+def auto_bench(quick: bool = True, levels: int = 2,
+               wavelet: str = "cdf97", reps: int = 3,
+               store_path=None) -> dict:
+    """Run the warm -> choose -> verify loop over the grid; returns the
+    machine-readable section embedded in the bench JSON artifact."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro import engine as E
+    from repro import profiler as PF
+    from repro.core import transform as T
+    from repro.engine.autotune import device_fingerprint
+
+    grid = QUICK_GRID if quick else FULL_GRID
+    reps = 2 if quick else reps
+    if store_path is None:
+        store_path = os.environ.get(PF.STORE_ENV)
+    if store_path is None:
+        store_path = os.path.join(tempfile.mkdtemp(prefix="repro-prof-"),
+                                  "PROFILE_STORE.jsonl")
+    store = PF.TraceStore(store_path)
+    # dwt2(backend="auto") resolves through the default store: point it
+    # at ours for the duration of the bench
+    prev = os.environ.get(PF.STORE_ENV)
+    os.environ[PF.STORE_ENV] = str(store.path)
+    try:
+        print(f"# profiler: backend=\"auto\" vs best manual config "
+              f"(store: {store.path})")
+        print("scheme,shape,best,best_ms,auto,auto_ms,auto_vs_best,source")
+        cells = []
+        for scheme, shape in grid:
+            recs = PF.warm_store(shape=shape, wavelet=wavelet,
+                                 scheme=scheme, levels=levels, reps=reps,
+                                 store=store)
+            best = min(recs, key=lambda r: r.time_s)
+            key = E.PlanKey(wavelet=wavelet, scheme=scheme, levels=levels,
+                            shape=tuple(shape), dtype="float32",
+                            backend="auto", optimize=False, fuse="none",
+                            boundary="periodic")
+            choice = PF.choose(key, store=store)
+            chosen = [r for r in recs if r.backend == choice.backend
+                      and r.fuse == choice.fuse]
+            auto_t = min(r.time_s for r in chosen) if chosen else None
+            ratio = (auto_t / best.time_s) if auto_t is not None else None
+            cells.append({
+                "scheme": scheme, "shape": list(shape),
+                "best": f"{best.backend}|{best.fuse}",
+                "best_ms": best.time_s * 1e3,
+                "auto": f"{choice.backend}|{choice.fuse}",
+                "auto_ms": None if auto_t is None else auto_t * 1e3,
+                "auto_vs_best": ratio, "source": choice.source})
+            print(f"{scheme},{shape[-2]}x{shape[-1]},"
+                  f"{best.backend}|{best.fuse},{best.time_s*1e3:.2f},"
+                  f"{choice.backend}|{choice.fuse},"
+                  f"{(auto_t or 0)*1e3:.2f},"
+                  f"{ratio if ratio is not None else float('nan'):.3f},"
+                  f"{choice.source}")
+
+        # end-to-end parity on the first grid cell: auto output must be
+        # bit-identical to a manual call of the chosen configuration
+        scheme, shape = grid[0]
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        pa = T.dwt2(x, wavelet=wavelet, levels=levels, scheme=scheme,
+                    backend="auto")
+        plan = E.get_plan(wavelet=wavelet, scheme=scheme, levels=levels,
+                          shape=tuple(shape), dtype="float32",
+                          backend="auto")
+        ch = plan.auto
+        pm = T.dwt2(x, wavelet=wavelet, levels=levels, scheme=scheme,
+                    backend=plan.key.backend, fuse=plan.key.fuse,
+                    tap_opt=plan.key.tap_opt)
+        parity = bool((np.asarray(pa.ll) == np.asarray(pm.ll)).all())
+        print(f"# parity: auto == manual {plan.key.backend}|{plan.key.fuse}"
+              f" bit-identical: {parity} (source={ch.source})")
+
+        # cost-model quality: refit from disk, predict every record
+        fp = device_fingerprint()
+        disk_recs = PF.TraceStore(store.path).records(fp)
+        model = PF.CostModel.fit(disk_recs)
+        errs = []
+        for r in disk_recs:
+            pred = model.predict(r.backend, r.fuse, r.hbm_bytes,
+                                 r.launches)
+            if pred is not None and r.time_s > 0:
+                errs.append(abs(pred - r.time_s) / r.time_s)
+        mean_err = sum(errs) / len(errs) if errs else None
+        print(f"# cost model: {len(disk_recs)} records, "
+              f"mean |pred-measured|/measured = "
+              f"{mean_err if mean_err is not None else float('nan'):.3f}")
+        counters = PF.auto_stats()
+        print(f"# auto counters: {counters}")
+        return {"store": str(store.path), "fingerprint": fp,
+                "cells": cells, "parity_bit_identical": parity,
+                "prediction_mean_abs_rel_err": mean_err,
+                "prediction_n": len(errs), "counters": counters}
+    finally:
+        if prev is None:
+            os.environ.pop(PF.STORE_ENV, None)
+        else:
+            os.environ[PF.STORE_ENV] = prev
+
+
+def main() -> dict:
+    quick = "--quick" in sys.argv
+    store = None
+    if "--store" in sys.argv:
+        i = sys.argv.index("--store")
+        if i + 1 >= len(sys.argv):
+            raise SystemExit("--store requires an argument")
+        store = sys.argv[i + 1]
+    doc = auto_bench(quick=quick, store_path=store)
+    bad = [c for c in doc["cells"]
+           if c["auto_vs_best"] is None or c["auto_vs_best"] > 1.10]
+    assert not bad, f"auto pick >10% worse than best manual config: {bad}"
+    assert doc["parity_bit_identical"], "auto != chosen backend output"
+    return doc
+
+
+if __name__ == "__main__":
+    main()

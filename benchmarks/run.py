@@ -13,15 +13,21 @@ Sections:
                 seed-style per-call dispatch (both backends).
   4. kernels  — per-kernel roofline (steps -> HBM round trips on TPU)
                 + per-plan launch summary.
-  5. compress — DWT gradient compression (framework integration).
-  6. roofline — per-(arch x shape x mesh) summary from the dry-run
+  5. auto     — profile-guided selection: warm the trace store on a
+                small grid, assert ``backend="auto"`` picks within 10%
+                of the best manual (backend, fuse) per cell, report
+                cost-model prediction error (the BENCH_6 CI gate).
+  6. compress — DWT gradient compression (framework integration).
+  7. roofline — per-(arch x shape x mesh) summary from the dry-run
                 artifacts (if present).
 
 ``--json PATH`` additionally writes every section's rows as a single
 machine-readable document (throughput numbers, op counts, and the
-op-count regression verdict), for CI trend tracking:
+op-count regression verdict), plus run metadata (device kind, platform,
+jax/jaxlib versions, interpret-mode flag) so artifacts and profiler
+traces are attributable across machines, for CI trend tracking:
 
-    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_2.json
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_6.json
 
 ``--backends`` limits the *measured* backends to a comma-separated
 subset of the registered ones (the analytic sections are
@@ -54,7 +60,11 @@ def main() -> None:
         raise SystemExit(f"unknown backends {sorted(unknown)}; registered: "
                          f"{engine.available_backends()}")
     t0 = time.time()
-    doc = {"quick": quick, "backends": list(backends)}
+    from repro.profiler import runtime_meta
+    doc = {"quick": quick, "backends": list(backends),
+           "meta": {**runtime_meta(), "argv": sys.argv[1:],
+                    "timestamp": time.time()}}
+    print(f"# run meta: {doc['meta']}")
 
     from benchmarks import table1_ops
     print("=" * 72)
@@ -96,6 +106,19 @@ def main() -> None:
         f"fuse='pyramid' HBM bytes not below fuse='levels' for: {worse}"
 
     print("=" * 72)
+    from benchmarks import profiler_bench
+    doc["auto"] = profiler_bench.auto_bench(quick=quick)
+    # CI gate: with a store warmed on the grid, the auto-picked config
+    # must never be >10% slower than the best manual (backend, fuse)
+    # for that cell, and auto output must be bit-identical to the
+    # chosen backend's
+    bad = [c for c in doc["auto"]["cells"]
+           if c["auto_vs_best"] is None or c["auto_vs_best"] > 1.10]
+    assert not bad, f"auto pick >10% worse than best manual config: {bad}"
+    assert doc["auto"]["parity_bit_identical"], \
+        "backend='auto' output != chosen backend output"
+
+    print("=" * 72)
     from benchmarks import compression_bench
     compression_bench.main()
 
@@ -116,6 +139,14 @@ def main() -> None:
           f"{cache['misses']} misses, {cache['size']} plans resident")
     print(f"# pyramid: {pyr['pyramid_kernel_launches']} megakernel "
           f"launches, {pyr['vmem_fallbacks']} VMEM fallbacks")
+    auto = stats["auto"]
+    print(f"# auto: {auto['predictions']} model predictions, "
+          f"{auto['store_hits']} store hits, "
+          f"{auto['cold_fallbacks']} cold-start fallbacks, "
+          f"choices {auto['choices']}")
+    print(f"# block table: "
+          f"{stats['block_table']['device_fallbacks']} device-mismatch "
+          f"fallbacks")
     for row in stats["plans"]:
         tiling = (f" tiles={row['tile_grid']}x{row['tiles']} "
                   f"margin={row['halo_margin']}" if "tiles" in row else "")

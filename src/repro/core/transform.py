@@ -29,6 +29,13 @@ Parameters shared by :func:`dwt2` and :func:`idwt2`:
     * "xla"     — compiled tap programs as grouped
       ``lax.conv_general_dilated`` calls (one fused conv per step;
       GPU/TPU/CPU-portable, no Pallas dependency)
+    * "auto"    — profile-guided: the measured cost model in
+      :mod:`repro.profiler` picks the concrete
+      ``(backend, fuse, block, tap_opt)`` for this device at plan
+      build (trace store at ``$REPRO_PROFILE_STORE``, cold-start
+      heuristic when empty).  ``fuse``/``tap_opt`` arguments become
+      hints the selector may override; output is bit-identical to
+      calling the chosen configuration manually.
 
     Unknown backends and unsupported (backend, configuration)
     combinations raise at plan build with the offending field named.

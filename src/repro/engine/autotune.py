@@ -8,12 +8,23 @@ consults this table before falling back to the static default target, so
 a one-off offline sweep speeds up every later plan build with zero API
 changes.
 
-The table format is intentionally trivial — ``{key: [bh, bw]}`` with
-``key = "scheme|HxW|fuse|backend"`` — so it can be versioned, diffed,
-and merged by hand.
+Entries are **measured on one machine**, so every key carries the
+device fingerprint (``platform:device_kind`` of ``jax.devices()[0]``)
+of the host that produced it: ``key = "scheme|HxW|fuse|backend|fp"``.
+:func:`lookup` only returns entries whose fingerprint matches the
+current device — a table tuned on a TPU must not steer block shapes on
+a GPU.  Entries for a *different* device (including the legacy
+un-fingerprinted format) fall back to the static default and are
+counted in :data:`COUNTERS` (surfaced via ``repro.engine.stats()``).
+
+The loaded table is memoized per process and re-read only when the
+``$REPRO_BLOCK_TABLE`` path changes or :func:`clear_cache` is called
+(:func:`save_entry` clears it), so plan-cache misses never pay repeated
+disk I/O.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import pathlib
@@ -24,7 +35,24 @@ TABLE_ENV = "REPRO_BLOCK_TABLE"
 DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] / \
     "BLOCK_TABLE.json"
 
-_cache: dict = {"path": None, "mtime": None, "table": {}}
+# device-mismatch observability: entries that exist for this config but
+# were tuned on another device (or predate fingerprinting) and were
+# therefore NOT applied
+COUNTERS = {"device_fallbacks": 0}
+
+_cache: dict = {"path": None, "table": {}}
+
+
+@functools.lru_cache(maxsize=1)
+def device_fingerprint() -> str:
+    """Stable identity of the device measurements apply to:
+    ``platform:device_kind`` of the first local device (e.g.
+    ``cpu:cpu``, ``tpu:TPU v5e``, ``gpu:NVIDIA A100-SXM4-40GB``).
+    ``|`` is reserved as the table-key separator and sanitized out."""
+    import jax
+    d = jax.devices()[0]
+    kind = str(getattr(d, "device_kind", "") or "unknown")
+    return f"{d.platform}:{kind}".replace("|", "/")
 
 
 def table_path() -> pathlib.Path:
@@ -32,37 +60,47 @@ def table_path() -> pathlib.Path:
 
 
 def table_key(scheme: str, shape: Tuple[int, int], fuse: str,
-              backend: str) -> str:
-    return f"{scheme}|{shape[0]}x{shape[1]}|{fuse}|{backend}"
+              backend: str, fingerprint: Optional[str] = None) -> str:
+    base = f"{scheme}|{shape[0]}x{shape[1]}|{fuse}|{backend}"
+    return base if fingerprint is None else f"{base}|{fingerprint}"
 
 
 def load_table() -> dict:
-    """Load (and mtime-cache) the block table; missing file -> empty."""
-    path = table_path()
-    try:
-        mtime = path.stat().st_mtime
-    except OSError:
-        return {}
-    if _cache["path"] == str(path) and _cache["mtime"] == mtime:
+    """Load the block table, memoized per process: the file is read once
+    per ``$REPRO_BLOCK_TABLE`` path and served from memory afterwards
+    (no per-lookup ``stat``), until the path changes or
+    :func:`clear_cache` invalidates it.  Missing file -> empty table."""
+    path = str(table_path())
+    if _cache["path"] == path:
         return _cache["table"]
     try:
         with open(path) as f:
             table = json.load(f)
     except (OSError, ValueError):
         table = {}
-    _cache.update(path=str(path), mtime=mtime, table=table)
+    _cache.update(path=path, table=table)
     return table
 
 
 def clear_cache() -> None:
-    _cache.update(path=None, mtime=None, table={})
+    _cache.update(path=None, table={})
 
 
 def lookup(scheme: str, shape: Tuple[int, int], fuse: str,
            backend: str) -> Optional[Tuple[int, int]]:
-    """Best measured block for one configuration, or None (use default)."""
-    entry = load_table().get(table_key(scheme, shape, fuse, backend))
-    if not entry:
+    """Best measured block for one configuration **on this device**, or
+    None (use the static default).  Entries tuned on a different device
+    — or written before fingerprinting — never apply; they bump
+    ``COUNTERS["device_fallbacks"]`` instead."""
+    table = load_table()
+    if not table:
+        return None
+    base = table_key(scheme, shape, fuse, backend)
+    entry = table.get(table_key(scheme, shape, fuse, backend,
+                                device_fingerprint()))
+    if entry is None:
+        if base in table or any(k.startswith(base + "|") for k in table):
+            COUNTERS["device_fallbacks"] += 1
         return None
     try:
         bh, bw = int(entry[0]), int(entry[1])
@@ -72,8 +110,10 @@ def lookup(scheme: str, shape: Tuple[int, int], fuse: str,
 
 
 def save_entry(scheme: str, shape: Tuple[int, int], fuse: str, backend: str,
-               block: Tuple[int, int], path=None) -> None:
-    """Merge one winner into the table on disk (read-modify-write)."""
+               block: Tuple[int, int], path=None,
+               fingerprint: Optional[str] = None) -> None:
+    """Merge one winner into the table on disk (read-modify-write),
+    keyed by this machine's device fingerprint unless one is given."""
     p = pathlib.Path(path) if path is not None else table_path()
     table = {}
     if p.exists():
@@ -82,8 +122,9 @@ def save_entry(scheme: str, shape: Tuple[int, int], fuse: str, backend: str,
                 table = json.load(f)
         except (OSError, ValueError):
             table = {}
-    table[table_key(scheme, shape, fuse, backend)] = [int(block[0]),
-                                                      int(block[1])]
+    fp = fingerprint if fingerprint is not None else device_fingerprint()
+    table[table_key(scheme, shape, fuse, backend, fp)] = [int(block[0]),
+                                                          int(block[1])]
     with open(p, "w") as f:
         json.dump(table, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -29,6 +29,12 @@ Registered backends:
   GPU/TPU/CPU-portable with no Pallas dependency.  This is the path
   that runs fast on GPUs today — XLA hands the composed filter banks to
   the vendor conv libraries of both biggest GPU vendors.
+* ``"auto"``   — profile-guided meta-backend: plan build asks the
+  measured cost model (:mod:`repro.profiler`) to pick the concrete
+  ``(backend, fuse, block_target, tap_opt)`` for this key on this
+  device, falling back to a deterministic platform heuristic when the
+  trace store is cold.  Plans never execute on it directly — the
+  resolved plan carries the chosen concrete backend.
 
 Third-party backends register the same way the built-ins do::
 
@@ -375,6 +381,35 @@ class XlaBackend(Backend):
         return len(plan.level_specs)
 
 
+class AutoBackend(Backend):
+    """Profile-guided meta-backend: ``build_plan`` resolves
+    ``backend="auto"`` through :func:`repro.profiler.auto.choose`
+    (measured store -> fitted cost model -> cold-start heuristic) and
+    builds the plan on the chosen concrete backend — the returned plan's
+    ``key.backend`` is the concrete one and ``plan.auto`` records the
+    choice.  The ``fuse``/``tap_opt`` arguments of an auto call are
+    hints only: the cost model overrides them (documented in
+    ``dwt2``); ``validate`` therefore accepts every generic key and the
+    chosen backend re-validates after substitution."""
+
+    name = "auto"
+    description = ("profile-guided: the measured cost model picks "
+                   "(backend, fuse, block, tap_opt) per device")
+
+    def validate(self, key) -> None:
+        # any generically-valid key is acceptable; the concrete backend
+        # chosen by the cost model re-validates the resolved key
+        return None
+
+    def make_forward(self, plan):
+        raise BackendError(
+            "backend 'auto' resolves to a concrete backend at plan "
+            "build; plans never execute on it directly")
+
+    make_inverse = make_forward
+
+
 register_backend(JnpBackend())
 register_backend(PallasBackend())
 register_backend(XlaBackend())
+register_backend(AutoBackend())

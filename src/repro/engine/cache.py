@@ -122,20 +122,27 @@ def clear_plan_cache() -> None:
 def stats() -> dict:
     """Engine-wide observability summary: plan-cache hit/miss counters,
     fused-pyramid counters (kernel launches, VMEM-budget fallbacks),
-    the registered-backend capability matrix, plus one row per cached
-    plan (steps, kernel launches, compiled tap-program op counts, tile
-    counts, pyramid window geometry) — what benchmarks and production
-    dashboards need to see at a glance.
+    auto-backend counters (cost-model predictions, store hits,
+    cold-start fallbacks, chosen-config histogram), block-table
+    device-mismatch fallbacks, the registered-backend capability matrix,
+    plus one row per cached plan (steps, kernel launches, compiled
+    tap-program op counts, tile counts, pyramid window geometry, the
+    auto-resolved choice) — what benchmarks and production dashboards
+    need to see at a glance.
 
     >>> from repro import engine
     >>> s = engine.stats()
     >>> sorted(s)
-    ['backends', 'plan_cache', 'plans', 'pyramid']
+    ['auto', 'backends', 'block_table', 'plan_cache', 'plans', 'pyramid']
     >>> [row["backend"] for row in s["backends"]]
-    ['jnp', 'pallas', 'xla']
+    ['auto', 'jnp', 'pallas', 'xla']
+    >>> sorted(s["auto"])
+    ['choices', 'cold_fallbacks', 'predictions', 'store_hits']
     """
+    from repro.engine import autotune as AT
     from repro.engine import backends as B
     from repro.engine import plan as P
+    from repro.profiler import auto as PA
     with _GLOBAL._lock:
         items = list(_GLOBAL._plans.items())
     plans = []
@@ -162,6 +169,18 @@ def stats() -> dict:
             row["pyramid_vmem_bytes"] = plan.pyramid.vmem_bytes
         if plan.fallback is not None:
             row["fallback"] = plan.fallback
+        if plan.auto is not None:
+            # the cache key says backend="auto"; the plan key carries the
+            # concrete resolution the cost model picked
+            row["auto"] = {"backend": plan.key.backend,
+                           "fuse": plan.key.fuse,
+                           "tap_opt": plan.key.tap_opt,
+                           "source": plan.auto.source,
+                           "predicted_s": plan.auto.predicted_s}
         plans.append(row)
     return {"plan_cache": _GLOBAL.stats(), "pyramid": dict(P.COUNTERS),
+            "auto": PA.auto_stats(),
+            "block_table": {"device_fallbacks":
+                            AT.COUNTERS["device_fallbacks"],
+                            "path": str(AT.table_path())},
             "backends": list(B.capability_matrix()), "plans": plans}

@@ -52,6 +52,7 @@ from repro.core import optimize as O
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
 from repro import compiler as C
+from repro.engine import autotune
 from repro.engine import backends as B
 
 FUSE_MODES = ("none", "scheme", "levels", "pyramid")
@@ -188,6 +189,9 @@ class DwtPlan:
     # VMEM-budget fallback (the plan then executes as fuse="levels")
     pyramid: Optional[PyramidSpec] = None
     fallback: Optional[str] = None      # why the pyramid kernel was skipped
+    # AutoChoice when this plan was resolved from backend="auto"; the
+    # plan's key then carries the *concrete* chosen backend/fuse/tap_opt
+    auto: Optional[object] = None
 
     @property
     def num_steps(self) -> int:
@@ -275,10 +279,10 @@ def _resolve_level(index: int, h: int, w: int, key: PlanKey,
 def _pick_block(key: PlanKey,
                 default: Tuple[int, int] = (256, 512)) -> Tuple[int, int]:
     """Block target for a plan: the autotuned table entry for this
-    ``(scheme, shape, fuse, backend)`` when one exists
-    (:mod:`repro.engine.autotune`, populated by ``benchmarks/autotune``),
+    ``(scheme, shape, fuse, backend)`` **on this device** when one
+    exists (:mod:`repro.engine.autotune`, populated by
+    ``benchmarks/autotune``; the loaded table is memoized per process),
     else the static ``default``."""
-    from repro.engine import autotune
     tuned = autotune.lookup(key.scheme, key.shape[-2:], key.fuse,
                             key.backend)
     return tuned if tuned is not None else default
@@ -354,6 +358,13 @@ def build_plan(key: PlanKey,
     ``(backend, PlanKey)`` combinations raise
     :class:`~repro.engine.backends.BackendError` here, at plan build,
     with the offending PlanKey field named.
+
+    ``backend="auto"`` delegates to the profiler
+    (:func:`repro.profiler.auto.choose`): the measured cost model picks
+    the concrete ``(backend, fuse, block_target, tap_opt)`` for this
+    device, and the returned plan — bit-identical in output to a manual
+    build of that configuration — carries the chosen backend in its key
+    plus the :class:`~repro.profiler.auto.AutoChoice` on ``plan.auto``.
     """
     backend = B.get_backend(key.backend)
     if key.fuse not in FUSE_MODES:
@@ -375,6 +386,23 @@ def build_plan(key: PlanKey,
     backend.validate(key)
     h, w = key.shape[-2], key.shape[-1]
     validate_image_geometry(h, w, key.levels)
+
+    if key.backend == "auto":
+        # profile-guided resolution: the cost model (or the cold-start
+        # heuristic) picks the concrete (backend, fuse, block, tap_opt);
+        # the returned plan executes — bit-identically — on the chosen
+        # backend, and records the choice for engine.stats()
+        from repro.profiler import auto as PA  # deferred: profiler->engine
+        choice = PA.choose(key, block_target=block_target)
+        concrete = dataclasses.replace(key, backend=choice.backend,
+                                       fuse=choice.fuse,
+                                       tap_opt=choice.tap_opt)
+        plan = build_plan(concrete,
+                          block_target=(block_target if block_target
+                                        is not None else choice.block))
+        plan.auto = choice
+        return plan
+
     if block_target is None:
         block_target = _pick_block(key)
 

@@ -1,0 +1,36 @@
+"""Profile-guided plan selection: trace, fit, predict, auto-pick.
+
+The measured feedback loop over the plan/executor engine
+(ROADMAP item 2, in the trace -> cost -> predicted-schedule style of
+byteprofile-analysis):
+
+* :mod:`repro.profiler.store` — persistent JSONL trace store
+  (``$REPRO_PROFILE_STORE``; ``PROFILE_STORE.jsonl`` at the repo root by
+  default), one :class:`TraceRecord` per measured plan execution, keyed
+  by the full plan configuration plus a device fingerprint;
+* :mod:`repro.profiler.trace` — :func:`profile_plan` measures a compiled
+  plan and persists the trace; :func:`warm_store` sweeps every valid
+  ``(backend, fuse)`` candidate for a configuration;
+* :mod:`repro.profiler.model` — :class:`CostModel`, a per-(backend,
+  fuse, device) linear model over the engine's analytic features
+  (modeled HBM bytes + launches) refined by nearest measured neighbors;
+* :mod:`repro.profiler.auto` — :func:`choose` resolves
+  ``PlanKey(backend="auto")`` to a concrete
+  ``(backend, fuse, block_target, tap_opt)``; the engine delegates to it
+  at plan build (``dwt2(..., backend="auto")``).
+"""
+from repro.profiler.auto import (AUTO_COUNTERS, AutoChoice, auto_stats,
+                                 choose, enumerate_candidates,
+                                 reset_counters)
+from repro.profiler.model import CostModel, config_features
+from repro.profiler.store import (STORE_ENV, TraceRecord, TraceStore,
+                                  runtime_meta, store_path)
+from repro.profiler.trace import measure_plan, profile_plan, warm_store
+
+__all__ = [
+    "TraceRecord", "TraceStore", "store_path", "runtime_meta", "STORE_ENV",
+    "CostModel", "config_features",
+    "measure_plan", "profile_plan", "warm_store",
+    "AutoChoice", "choose", "enumerate_candidates", "auto_stats",
+    "reset_counters", "AUTO_COUNTERS",
+]

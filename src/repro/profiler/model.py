@@ -1,0 +1,136 @@
+"""Fitted cost model: predict wall-clock for unseen plan configurations.
+
+The features are the two quantities the engine already models
+analytically for every configuration — HBM bytes moved
+(:func:`repro.kernels.polyphase.scheme_hbm_bytes` /
+``pyramid_hbm_bytes``) and kernel launches per execution (the
+registry's launch models) — so a prediction needs **no plan build and
+no tracing**.  Per ``(backend, fuse)`` group on one device:
+
+* with >= :data:`MIN_FIT` records, a least-squares linear model
+  ``t ~ a*bytes + b*launches + c`` captures the bandwidth/overhead
+  split (the memory-bound story of the paper: time is bytes over
+  bandwidth plus a per-launch constant);
+* every prediction is refined by the nearest measured neighbor in the
+  group (nearest in log-byte distance), scaled by the byte ratio —
+  with few records this degrades gracefully to pure
+  nearest-neighbor extrapolation.
+
+Fitting is deterministic in the record set, so a store that round-trips
+through disk reproduces identical predictions (CI-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+MIN_FIT = 3          # records per group before a linear fit is attempted
+
+
+def config_features(key, backend: Optional[str] = None,
+                    fuse: Optional[str] = None,
+                    tap_opt: Optional[str] = None,
+                    block: Optional[Tuple[int, int]] = None) -> dict:
+    """Analytic cost-model features of one configuration: modeled HBM
+    bytes of the full multi-level transform (batch dims included) and
+    modeled kernel launches per execution.  ``backend``/``fuse``/
+    ``tap_opt``/``block`` override the corresponding ``key`` fields so
+    candidate configurations can be featurized from one base key.
+    Tiled keys are featurized as monolithic (tiles ride the batch dims
+    of the gather transport; the per-group model absorbs the constant
+    factor)."""
+    from repro import compiler as C
+    from repro.engine import plan as P
+    from repro.kernels import polyphase as PP
+    import jax.numpy as jnp
+
+    backend = backend if backend is not None else key.backend
+    fuse = fuse if fuse is not None else key.fuse
+    tap_opt = tap_opt if tap_opt is not None else key.tap_opt
+    block = block if block is not None else (256, 512)
+    h, w = key.shape[-2], key.shape[-1]
+    batch = 1
+    for d in key.shape[:-2]:
+        batch *= int(d)
+    itemsize = jnp.dtype(key.dtype).itemsize
+    steps = P.scheme_steps(key.wavelet, key.scheme, key.optimize, False)
+    programs = None
+    if tap_opt != "off":
+        programs = C.compile_scheme_programs(
+            key.wavelet, key.scheme, key.optimize, False, tap_opt,
+            "none" if fuse == "none" else "scheme")
+    if backend == "xla":
+        kfuse = "none" if fuse == "none" else "scheme"
+        hbm = sum(PP.scheme_hbm_bytes(steps, (h >> l, w >> l), itemsize,
+                                      fuse=kfuse, programs=programs,
+                                      backend="xla")
+                  for l in range(key.levels))
+    else:
+        hbm = PP.pyramid_hbm_bytes(steps, (h, w), itemsize, key.levels,
+                                   fuse=fuse, block=block,
+                                   programs=programs)
+    per_level = len(steps)
+    if backend == "jnp":
+        launches = 0
+    elif backend == "pallas" and fuse == "pyramid":
+        launches = 1
+    elif fuse == "none":
+        launches = per_level * key.levels
+    else:
+        launches = key.levels
+    return {"hbm_bytes": int(hbm) * batch, "launches": int(launches)}
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Per-(backend, fuse) wall-clock predictor over one device's records.
+
+    ``groups`` maps ``(backend, fuse)`` to sorted ``(bytes, launches,
+    time_s)`` rows; ``coef`` to the fitted ``(a, b, c)`` of
+    ``t = a*bytes + b*launches + c`` (None below :data:`MIN_FIT`
+    records)."""
+
+    groups: Dict[Tuple[str, str], List[Tuple[int, int, float]]]
+    coef: Dict[Tuple[str, str], Optional[Tuple[float, float, float]]]
+
+    @classmethod
+    def fit(cls, records) -> "CostModel":
+        import numpy as np
+        groups: Dict[Tuple[str, str], List[Tuple[int, int, float]]] = {}
+        for r in records:
+            groups.setdefault((r.backend, r.fuse), []).append(
+                (int(r.hbm_bytes), int(r.launches), float(r.time_s)))
+        coef = {}
+        for g, rows in groups.items():
+            rows.sort()                      # deterministic in the set
+            if len(rows) >= MIN_FIT:
+                a = np.array([[b, l, 1.0] for b, l, _ in rows], np.float64)
+                y = np.array([t for _, _, t in rows], np.float64)
+                sol, *_ = np.linalg.lstsq(a, y, rcond=None)
+                coef[g] = (float(sol[0]), float(sol[1]), float(sol[2]))
+            else:
+                coef[g] = None
+        return cls(groups=groups, coef=coef)
+
+    def can_predict(self, backend: str, fuse: str) -> bool:
+        return bool(self.groups.get((backend, fuse)))
+
+    def predict(self, backend: str, fuse: str, hbm_bytes: int,
+                launches: int) -> Optional[float]:
+        """Predicted seconds per execution, or None when no record of
+        this ``(backend, fuse)`` group exists on this device (the model
+        never extrapolates across execution strategies it has not
+        seen)."""
+        rows = self.groups.get((backend, fuse))
+        if not rows:
+            return None
+        nn = min(rows, key=lambda r: (abs(math.log(max(hbm_bytes, 1)
+                                                   / max(r[0], 1))), r))
+        t_nn = nn[2] * (max(hbm_bytes, 1) / max(nn[0], 1))
+        c = self.coef.get((backend, fuse))
+        if c is not None:
+            t_lin = c[0] * hbm_bytes + c[1] * launches + c[2]
+            if t_lin > 0:
+                return 0.5 * (t_nn + t_lin)
+        return t_nn

@@ -1,0 +1,206 @@
+"""Persistent per-plan execution trace store (JSONL).
+
+One :class:`TraceRecord` per measured plan execution: the full
+:class:`~repro.engine.plan.PlanKey` configuration, the device
+fingerprint it was measured on, the measured wall-clock, the backend's
+launch count, and the modeled HBM bytes (the cost-model features, see
+:mod:`repro.profiler.model`).  Records append to a JSON-lines file —
+``PROFILE_STORE.jsonl`` at the repo root by default, or the path in
+``$REPRO_PROFILE_STORE`` — so stores can be versioned, merged across
+machines (records from other devices are filtered out at query time by
+fingerprint), and re-read to reproduce identical predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+from typing import List, Optional, Tuple
+
+from repro.engine.autotune import device_fingerprint
+
+STORE_ENV = "REPRO_PROFILE_STORE"
+# src/repro/profiler/store.py -> profiler -> repro -> src -> repo root
+DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] / \
+    "PROFILE_STORE.jsonl"
+
+#: PlanKey fields that identify *what* is being transformed — everything
+#: except the (backend, fuse, tap_opt) choice dimensions the auto
+#: selector optimizes over
+CONFIG_FIELDS = ("wavelet", "scheme", "levels", "shape", "dtype",
+                 "optimize", "boundary", "compute_dtype", "tiles")
+#: the choice dimensions
+CHOICE_FIELDS = ("backend", "fuse", "tap_opt")
+
+
+def store_path() -> pathlib.Path:
+    return pathlib.Path(os.environ.get(STORE_ENV, str(DEFAULT_PATH)))
+
+
+def runtime_meta() -> dict:
+    """Attribution metadata for benchmark artifacts and trace records:
+    which device/software stack produced a measurement."""
+    import platform as _platform
+
+    import jax
+    d = jax.devices()[0]
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:                           # pragma: no cover
+        jaxlib_version = None
+    return {"device_kind": str(getattr(d, "device_kind", "") or "unknown"),
+            "platform": d.platform,
+            "fingerprint": device_fingerprint(),
+            "jax_version": jax.__version__,
+            "jaxlib_version": jaxlib_version,
+            "python_version": _platform.python_version(),
+            # the pallas kernels run through the interpreter off-TPU, so
+            # pallas wall-clocks from such hosts are interpreter numbers
+            "pallas_interpret": d.platform != "tpu"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRecord:
+    """One measured plan execution."""
+
+    fingerprint: str                  # device identity (platform:kind)
+    wavelet: str
+    scheme: str
+    levels: int
+    shape: Tuple[int, ...]
+    dtype: str
+    backend: str
+    optimize: bool
+    fuse: str
+    boundary: str
+    compute_dtype: str
+    tap_opt: str
+    tiles: Optional[Tuple[int, int]]
+    block: Optional[Tuple[int, int]]  # resolved block target actually run
+    time_s: float                     # measured median wall-clock/execution
+    hbm_bytes: int                    # modeled bytes (cost-model feature)
+    launches: int                     # modeled launches (cost-model feature)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def matches_key(self, key) -> bool:
+        """True when this record measures the same *configuration* as
+        ``key`` (all PlanKey fields except the backend/fuse/tap_opt
+        choice dimensions)."""
+        return all(getattr(self, f) == getattr(key, f)
+                   for f in CONFIG_FIELDS)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["v"] = 1
+        return json.dumps(d, sort_keys=True, default=str)
+
+    @classmethod
+    def from_json(cls, line: str) -> Optional["TraceRecord"]:
+        try:
+            d = json.loads(line)
+        except ValueError:
+            return None
+        if not isinstance(d, dict) or d.pop("v", None) != 1:
+            return None
+        try:
+            return cls(
+                fingerprint=str(d["fingerprint"]),
+                wavelet=str(d["wavelet"]), scheme=str(d["scheme"]),
+                levels=int(d["levels"]),
+                shape=tuple(int(v) for v in d["shape"]),
+                dtype=str(d["dtype"]), backend=str(d["backend"]),
+                optimize=bool(d["optimize"]), fuse=str(d["fuse"]),
+                boundary=str(d["boundary"]),
+                compute_dtype=str(d["compute_dtype"]),
+                tap_opt=str(d["tap_opt"]),
+                tiles=(None if d.get("tiles") is None
+                       else tuple(int(v) for v in d["tiles"])),
+                block=(None if d.get("block") is None
+                       else tuple(int(v) for v in d["block"])),
+                time_s=float(d["time_s"]), hbm_bytes=int(d["hbm_bytes"]),
+                launches=int(d["launches"]),
+                meta=dict(d.get("meta") or {}))
+        except (KeyError, TypeError, ValueError):
+            return None
+
+
+def record_from_key(key, block, time_s: float, hbm_bytes: int,
+                    launches: int, meta: Optional[dict] = None
+                    ) -> TraceRecord:
+    """Build a :class:`TraceRecord` for a measurement of ``key`` made on
+    this machine."""
+    return TraceRecord(
+        fingerprint=device_fingerprint(),
+        wavelet=key.wavelet, scheme=key.scheme, levels=key.levels,
+        shape=tuple(key.shape), dtype=key.dtype, backend=key.backend,
+        optimize=key.optimize, fuse=key.fuse, boundary=key.boundary,
+        compute_dtype=key.compute_dtype, tap_opt=key.tap_opt,
+        tiles=key.tiles,
+        block=None if block is None else (int(block[0]), int(block[1])),
+        time_s=float(time_s), hbm_bytes=int(hbm_bytes),
+        launches=int(launches), meta=dict(meta or {}))
+
+
+class TraceStore:
+    """Append-only JSONL store of :class:`TraceRecord` s.
+
+    Loads lazily and caches by ``(mtime_ns, size)`` so repeated queries
+    (one per plan-cache miss under ``backend="auto"``) re-read the file
+    only after it actually changed; malformed lines are skipped, so a
+    partially-written or hand-merged store degrades gracefully.
+    """
+
+    def __init__(self, path=None):
+        self.path = pathlib.Path(path) if path is not None else store_path()
+        self._stamp = None
+        self._records: List[TraceRecord] = []
+
+    def _load(self) -> List[TraceRecord]:
+        try:
+            st = self.path.stat()
+            stamp = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            self._stamp, self._records = None, []
+            return self._records
+        if stamp == self._stamp:
+            return self._records
+        records = []
+        try:
+            with open(self.path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    rec = TraceRecord.from_json(line)
+                    if rec is not None:
+                        records.append(rec)
+        except OSError:
+            records = []
+        self._stamp, self._records = stamp, records
+        return records
+
+    def records(self, fingerprint: Optional[str] = None
+                ) -> List[TraceRecord]:
+        """All records (optionally only those measured on one device)."""
+        recs = self._load()
+        if fingerprint is None:
+            return list(recs)
+        return [r for r in recs if r.fingerprint == fingerprint]
+
+    def append(self, record: TraceRecord) -> None:
+        self.extend([record])
+
+    def extend(self, records) -> None:
+        records = list(records)
+        if not records:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.path, "a") as f:
+            for rec in records:
+                f.write(rec.to_json() + "\n")
+        self._stamp = None               # force re-read on next query
+
+    def __len__(self) -> int:
+        return len(self._load())

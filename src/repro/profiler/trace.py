@@ -1,0 +1,94 @@
+"""Per-plan execution tracer: measure a plan, persist a trace record.
+
+:func:`profile_plan` runs one compiled plan to steady state (one warmup
+execution for compile/trace, then ``reps`` timed executions, median
+taken), pairs the measured wall-clock with the plan's analytic cost
+features (:func:`repro.profiler.model.config_features`) and the
+backend's actual launch count, and appends the
+:class:`~repro.profiler.store.TraceRecord` to the persistent store.
+
+:func:`warm_store` is the grid warmer used by ``benchmarks/run.py`` and
+CI: it measures every valid ``(backend, fuse)`` candidate for one
+configuration so ``backend="auto"`` resolves from measurements instead
+of the cold-start heuristic.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+from repro.profiler import model as M
+from repro.profiler import store as ST
+
+
+def measure_plan(plan, x=None, reps: int = 3) -> float:
+    """Median seconds per ``plan.execute`` (one warmup for compile)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    if x is None:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(plan.key.shape),
+                        jnp.dtype(plan.key.dtype))
+    jax.block_until_ready(plan.execute(x).ll)
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(plan.execute(x).ll)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def profile_plan(plan, x=None, reps: int = 3,
+                 store: Optional[ST.TraceStore] = None,
+                 block=None, record: bool = True) -> ST.TraceRecord:
+    """Measure one plan execution and (by default) persist the trace.
+
+    ``block`` annotates the block target the plan was built with (the
+    autotuner's sweep passes each candidate); when omitted, the resolved
+    finest-level block is recorded.  Pass ``record=False`` to measure
+    without touching the store.
+    """
+    key = plan.key
+    t = measure_plan(plan, x=x, reps=reps)
+    feats = M.config_features(key, block=block)
+    if block is None:
+        block = (plan.pyramid.target if plan.pyramid is not None
+                 else plan.level_specs[0].block)
+    rec = ST.record_from_key(
+        key, block, t, feats["hbm_bytes"], feats["launches"],
+        meta={"plan_launches": plan.pallas_calls, **ST.runtime_meta()})
+    if record:
+        (store if store is not None else ST.TraceStore()).append(rec)
+    return rec
+
+
+def warm_store(shape=(1, 64, 64), wavelet: str = "cdf97",
+               scheme: str = "ns-polyconv", levels: int = 2,
+               dtype: str = "float32", optimize: bool = False,
+               compute_dtype: str = "float32", reps: int = 3,
+               store: Optional[ST.TraceStore] = None,
+               candidates=None) -> List[ST.TraceRecord]:
+    """Measure every valid ``(backend, fuse, tap_opt)`` candidate for one
+    configuration and append the traces to the store; returns the new
+    records.  Plans are built directly (bypassing the plan cache) so a
+    warmed process state never skews the measurements."""
+    from repro import engine as E
+    from repro.profiler import auto as A
+    key = E.PlanKey(wavelet=wavelet, scheme=scheme, levels=int(levels),
+                    shape=tuple(int(d) for d in shape), dtype=dtype,
+                    backend="auto", optimize=bool(optimize), fuse="none",
+                    boundary="periodic", compute_dtype=compute_dtype,
+                    tap_opt="full")
+    if candidates is None:
+        candidates = A.enumerate_candidates(key)
+    if store is None:
+        store = ST.TraceStore()
+    import dataclasses
+    records = []
+    for backend, fuse, tap_opt in candidates:
+        concrete = dataclasses.replace(key, backend=backend, fuse=fuse,
+                                       tap_opt=tap_opt)
+        plan = E.build_plan(concrete)
+        records.append(profile_plan(plan, reps=reps, store=store))
+    return records

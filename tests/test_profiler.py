@@ -1,0 +1,390 @@
+"""Profile-guided plan selection: store, cost model, backend="auto".
+
+Covers the acceptance criteria of the profiler subsystem:
+* device fingerprint determinism and the fingerprint-keyed block table
+  (foreign entries fall back to the static default and are counted);
+* trace-store round-trip — records written, reloaded, and refit must
+  reproduce bit-identical predictions;
+* analytic config features (HBM bytes + launches) sanity;
+* choose(): cold-start heuristic, exact store hits, model predictions,
+  and the counters behind ``engine.stats()["auto"]``;
+* dwt2(backend="auto") end-to-end bit-identity with the backend it
+  resolves to, on both cold and warmed stores.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import engine as E
+from repro import profiler as PF
+from repro.core import transform as T
+from repro.engine import autotune as AT
+from repro.profiler import auto as PA
+from repro.profiler.store import record_from_key
+
+
+def _key(shape=(2, 32, 32), backend="auto", fuse="none", levels=2,
+         scheme="ns-polyconv", **kw):
+    return E.PlanKey(wavelet="cdf97", scheme=scheme, levels=levels,
+                     shape=shape, dtype="float32", backend=backend,
+                     optimize=False, fuse=fuse, boundary="periodic", **kw)
+
+
+def _rec(key, backend, fuse, time_s, tap_opt="full", block=None):
+    """Synthetic measured record of ``key`` under one candidate config."""
+    concrete = dataclasses.replace(key, backend=backend, fuse=fuse,
+                                   tap_opt=tap_opt)
+    feats = PF.config_features(concrete)
+    return record_from_key(concrete, block, time_s, feats["hbm_bytes"],
+                           feats["launches"])
+
+
+@pytest.fixture
+def store(tmp_path, monkeypatch):
+    """Isolated trace store, also wired up as the process default."""
+    path = tmp_path / "PROFILE_STORE.jsonl"
+    monkeypatch.setenv(PF.STORE_ENV, str(path))
+    return PF.TraceStore(path)
+
+
+# ---------------------------------------------------------------------------
+# Device fingerprint + fingerprint-keyed block table
+# ---------------------------------------------------------------------------
+
+def test_device_fingerprint_deterministic():
+    fp = AT.device_fingerprint()
+    assert fp == AT.device_fingerprint()
+    assert ":" in fp and "|" not in fp    # "|" is the table-key separator
+    platform = fp.split(":", 1)[0]
+    assert platform in ("cpu", "gpu", "tpu")
+
+
+def test_block_table_keys_carry_fingerprint(tmp_path, monkeypatch):
+    path = tmp_path / "BLOCK_TABLE.json"
+    monkeypatch.setenv(AT.TABLE_ENV, str(path))
+    AT.clear_cache()
+    AT.save_entry("ns-polyconv", (64, 64), "levels", "pallas", (128, 256))
+    table = json.load(open(path))
+    (key,) = table
+    assert key.endswith("|" + AT.device_fingerprint())
+    assert AT.lookup("ns-polyconv", (64, 64), "levels", "pallas") \
+        == (128, 256)
+    AT.clear_cache()
+
+
+def test_block_table_foreign_fingerprint_falls_back(tmp_path, monkeypatch):
+    path = tmp_path / "BLOCK_TABLE.json"
+    monkeypatch.setenv(AT.TABLE_ENV, str(path))
+    AT.clear_cache()
+    AT.save_entry("ns-polyconv", (64, 64), "levels", "pallas", (512, 512),
+                  fingerprint="tpu:TPU vMars")
+    before = AT.COUNTERS["device_fallbacks"]
+    assert AT.lookup("ns-polyconv", (64, 64), "levels", "pallas") is None
+    assert AT.COUNTERS["device_fallbacks"] == before + 1
+    # a legacy un-fingerprinted entry is also a mismatch, not a match
+    table = json.load(open(path))
+    table[AT.table_key("sep-conv", (64, 64), "levels", "pallas")] = [64, 64]
+    path.write_text(json.dumps(table))
+    AT.clear_cache()
+    assert AT.lookup("sep-conv", (64, 64), "levels", "pallas") is None
+    assert AT.COUNTERS["device_fallbacks"] == before + 2
+    # a config with no entry at all is silent (no counter bump)
+    assert AT.lookup("ns-conv", (64, 64), "levels", "pallas") is None
+    assert AT.COUNTERS["device_fallbacks"] == before + 2
+    AT.clear_cache()
+
+
+def test_block_table_memoized_per_path(tmp_path, monkeypatch):
+    """The table file is read once per path: rewriting it behind the
+    memo's back is invisible until the path changes or the cache is
+    cleared (save_entry clears it)."""
+    p1 = tmp_path / "t1.json"
+    p1.write_text(json.dumps(
+        {AT.table_key("ns-polyconv", (64, 64), "levels", "pallas",
+                      AT.device_fingerprint()): [128, 256]}))
+    monkeypatch.setenv(AT.TABLE_ENV, str(p1))
+    AT.clear_cache()
+    assert AT.lookup("ns-polyconv", (64, 64), "levels", "pallas") \
+        == (128, 256)
+    p1.write_text(json.dumps(
+        {AT.table_key("ns-polyconv", (64, 64), "levels", "pallas",
+                      AT.device_fingerprint()): [512, 512]}))
+    assert AT.lookup("ns-polyconv", (64, 64), "levels", "pallas") \
+        == (128, 256)                    # memoized: no re-read, no stat
+    # pointing the env var elsewhere invalidates the memo
+    p2 = tmp_path / "t2.json"
+    p2.write_text(json.dumps(
+        {AT.table_key("ns-polyconv", (64, 64), "levels", "pallas",
+                      AT.device_fingerprint()): [256, 1024]}))
+    monkeypatch.setenv(AT.TABLE_ENV, str(p2))
+    assert AT.lookup("ns-polyconv", (64, 64), "levels", "pallas") \
+        == (256, 1024)
+    AT.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# Trace store
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip_identical_predictions(store):
+    key = _key()
+    recs = [_rec(key, "jnp", "none", 1e-3),
+            _rec(key, "jnp", "levels", 8e-4),
+            _rec(key, "xla", "levels", 5e-4),
+            _rec(dataclasses.replace(key, shape=(2, 64, 64)),
+                 "jnp", "levels", 3e-3),
+            _rec(dataclasses.replace(key, shape=(2, 128, 128)),
+                 "jnp", "levels", 1.2e-2)]
+    store.extend(recs)
+    fp = AT.device_fingerprint()
+    reloaded = PF.TraceStore(store.path).records(fp)
+    assert reloaded == recs
+    m1 = PF.CostModel.fit(recs)
+    m2 = PF.CostModel.fit(reloaded)
+    probe = PF.config_features(
+        dataclasses.replace(key, backend="jnp", fuse="levels",
+                            shape=(2, 96, 96), tap_opt="full"))
+    for backend, fuse in (("jnp", "none"), ("jnp", "levels"),
+                          ("xla", "levels")):
+        p1 = m1.predict(backend, fuse, probe["hbm_bytes"],
+                        probe["launches"])
+        assert p1 == m2.predict(backend, fuse, probe["hbm_bytes"],
+                                probe["launches"])
+        assert p1 is not None and p1 > 0
+
+
+def test_store_skips_malformed_lines_and_filters_fingerprint(store):
+    key = _key()
+    store.append(_rec(key, "jnp", "none", 1e-3))
+    with open(store.path, "a") as f:
+        f.write("not json at all\n")
+        f.write(json.dumps({"v": 99, "time_s": 1.0}) + "\n")
+        f.write(json.dumps({"v": 1, "wavelet": "cdf97"}) + "\n")  # missing
+    foreign = dataclasses.replace(_rec(key, "xla", "levels", 2e-3),
+                                  fingerprint="tpu:TPU vElsewhere")
+    store.append(foreign)
+    assert len(store) == 2               # malformed lines dropped
+    mine = store.records(AT.device_fingerprint())
+    assert len(mine) == 1 and mine[0].backend == "jnp"
+
+
+def test_store_caches_by_stamp_and_invalidates_on_append(store):
+    key = _key()
+    store.append(_rec(key, "jnp", "none", 1e-3))
+    assert len(store.records()) == 1
+    store.append(_rec(key, "jnp", "levels", 9e-4))
+    assert len(store.records()) == 2     # append invalidates the cache
+    # a second handle sees the same file
+    assert len(PF.TraceStore(store.path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Analytic features + cost model
+# ---------------------------------------------------------------------------
+
+def test_config_features_sanity():
+    key = _key(shape=(2, 64, 64))
+    f_jnp = PF.config_features(key, backend="jnp", fuse="none",
+                               tap_opt="full")
+    f_none = PF.config_features(key, backend="pallas", fuse="none",
+                                tap_opt="full")
+    f_lvl = PF.config_features(key, backend="pallas", fuse="levels",
+                               tap_opt="full")
+    f_pyr = PF.config_features(key, backend="pallas", fuse="pyramid",
+                               tap_opt="full")
+    f_xla = PF.config_features(key, backend="xla", fuse="levels",
+                               tap_opt="full")
+    for f in (f_jnp, f_none, f_lvl, f_pyr, f_xla):
+        assert f["hbm_bytes"] > 0
+    assert f_jnp["launches"] == 0
+    assert f_pyr["launches"] == 1
+    assert f_lvl["launches"] == key.levels
+    assert f_none["launches"] > f_lvl["launches"]    # steps/level > 1
+    # the megakernel's whole point: fewer modeled bytes than per-level —
+    # at plane sizes where the compound halo amortizes (the tiny 64x64
+    # plane above is legitimately halo-dominated)
+    big = _key(shape=(1, 512, 512), levels=3)
+    f_lvl_big = PF.config_features(big, backend="pallas", fuse="levels",
+                                   tap_opt="full")
+    f_pyr_big = PF.config_features(big, backend="pallas", fuse="pyramid",
+                                   tap_opt="full")
+    assert f_pyr_big["hbm_bytes"] < f_lvl_big["hbm_bytes"]
+    # batch dims scale bytes linearly, launches stay fixed
+    f2 = PF.config_features(_key(shape=(4, 64, 64)), backend="pallas",
+                            fuse="levels", tap_opt="full")
+    assert f2["hbm_bytes"] == 2 * f_lvl["hbm_bytes"]
+    assert f2["launches"] == f_lvl["launches"]
+
+
+def test_cost_model_fit_and_predict_synthetic():
+    key = _key()
+
+    def rec(shape, t):
+        return _rec(dataclasses.replace(key, shape=shape),
+                    "jnp", "levels", t)
+
+    # perfectly linear in bytes: t = bytes * 1e-12 + 1e-4
+    shapes = [(1, 32, 32), (1, 64, 64), (1, 128, 128), (1, 256, 256)]
+    recs = []
+    for s in shapes:
+        b = PF.config_features(
+            dataclasses.replace(key, shape=s, backend="jnp",
+                                fuse="levels", tap_opt="full"))["hbm_bytes"]
+        recs.append(rec(s, b * 1e-12 + 1e-4))
+    model = PF.CostModel.fit(recs)
+    assert model.can_predict("jnp", "levels")
+    assert not model.can_predict("pallas", "pyramid")
+    assert model.predict("pallas", "pyramid", 10**6, 1) is None
+    probe = PF.config_features(
+        dataclasses.replace(key, shape=(1, 96, 96), backend="jnp",
+                            fuse="levels", tap_opt="full"))
+    pred = model.predict("jnp", "levels", probe["hbm_bytes"],
+                         probe["launches"])
+    truth = probe["hbm_bytes"] * 1e-12 + 1e-4
+    assert pred == pytest.approx(truth, rel=0.35)  # nn-blend is approximate
+
+
+# ---------------------------------------------------------------------------
+# choose(): cold / warm / model paths + counters
+# ---------------------------------------------------------------------------
+
+def test_choose_cold_store_uses_heuristic(store):
+    before = dict(PA.AUTO_COUNTERS)
+    choice = PF.choose(_key(), store=store)
+    assert choice.source == "heuristic"
+    assert PA.AUTO_COUNTERS["cold_fallbacks"] == \
+        before["cold_fallbacks"] + 1
+    # deterministic per platform; off-TPU/GPU it is the jnp reference
+    import jax
+    if jax.devices()[0].platform not in ("tpu", "gpu"):
+        assert (choice.backend, choice.fuse) == ("jnp", "levels")
+    # the chosen config must actually validate
+    from repro.engine import backends as B
+    B.get_backend(choice.backend).validate(
+        dataclasses.replace(_key(), backend=choice.backend,
+                            fuse=choice.fuse, tap_opt=choice.tap_opt))
+
+
+def test_choose_store_hit_picks_measured_argmin(store):
+    key = _key()
+    store.extend([_rec(key, "jnp", "none", 5e-3),
+                  _rec(key, "jnp", "levels", 3e-3),
+                  _rec(key, "xla", "levels", 1e-3),
+                  _rec(key, "pallas", "levels", 2e-3)])
+    before = dict(PA.AUTO_COUNTERS)
+    choice = PF.choose(key, store=store)
+    assert choice.source == "store"
+    assert (choice.backend, choice.fuse) == ("xla", "levels")
+    assert choice.predicted_s == pytest.approx(1e-3)
+    assert PA.AUTO_COUNTERS["store_hits"] == before["store_hits"] + 1
+    label = f"{choice.backend}|{choice.fuse}"
+    assert PA.auto_stats()["choices"][label] >= 1
+    # flip the measurements: the choice must follow the store
+    store.append(_rec(key, "jnp", "levels", 1e-5))
+    assert (lambda c: (c.backend, c.fuse))(PF.choose(key, store=store)) \
+        == ("jnp", "levels")
+
+
+def test_choose_unseen_shape_uses_model(store):
+    key = _key(shape=(2, 32, 32))
+    # three sizes per group -> linear fit; probe a fourth, unseen size
+    for shape, t in (((2, 32, 32), 1e-3), ((2, 64, 64), 4e-3),
+                     ((2, 128, 128), 1.6e-2)):
+        k = dataclasses.replace(key, shape=shape)
+        store.extend([_rec(k, "jnp", "levels", t),
+                      _rec(k, "xla", "levels", 10 * t)])
+    before = dict(PA.AUTO_COUNTERS)
+    probe = _key(shape=(2, 96, 96))
+    choice = PF.choose(probe, store=store)
+    assert choice.source == "model"
+    assert PA.AUTO_COUNTERS["predictions"] == before["predictions"] + 1
+    # jnp measured 10x faster than xla at every size: the model must
+    # not invert that at an interpolated size
+    assert (choice.backend, choice.fuse) == ("jnp", "levels")
+    assert choice.predicted_s is not None and choice.predicted_s > 0
+
+
+def test_choose_block_comes_from_store_record(store):
+    key = _key()
+    store.append(_rec(key, "pallas", "levels", 1e-4, block=(128, 256)))
+    choice = PF.choose(key, store=store)
+    assert (choice.backend, choice.block) == ("pallas", (128, 256))
+    # an explicit caller block_target suppresses the store's annotation
+    assert PF.choose(key, store=store, block_target=(64, 64)).block is None
+
+
+# ---------------------------------------------------------------------------
+# backend="auto" end to end
+# ---------------------------------------------------------------------------
+
+def test_dwt2_auto_cold_bit_identical(store):
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((2, 32, 32)), jnp.float32)
+    cache = E.PlanCache()
+    plan = E.get_plan(shape=(2, 32, 32), levels=2, backend="auto",
+                      cache=cache)
+    assert plan.auto is not None and plan.auto.source == "heuristic"
+    assert plan.key.backend != "auto"     # resolved to a concrete backend
+    manual = E.get_plan(shape=(2, 32, 32), levels=2,
+                        backend=plan.key.backend, fuse=plan.key.fuse,
+                        tap_opt=plan.key.tap_opt, cache=cache)
+    pa, pm = plan.execute(x), manual.execute(x)
+    assert (np.asarray(pa.ll) == np.asarray(pm.ll)).all()
+    for da, dm in zip(pa.details, pm.details):
+        for a, m in zip(da, dm):
+            assert (np.asarray(a) == np.asarray(m)).all()
+    # inverse round-trips through the same auto plan
+    xr = plan.execute_inverse(pa)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_dwt2_auto_warm_follows_store(store):
+    shape = (2, 32, 32)
+    key = _key(shape=shape)
+    store.extend([_rec(key, "jnp", "none", 5e-3),
+                  _rec(key, "xla", "levels", 1e-4),
+                  _rec(key, "jnp", "levels", 3e-3)])
+    x = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal(shape), jnp.float32)
+    cache = E.PlanCache()
+    plan = E.get_plan(shape=shape, levels=2, backend="auto", cache=cache)
+    assert plan.auto.source == "store"
+    assert (plan.key.backend, plan.key.fuse) == ("xla", "levels")
+    pa = plan.execute(x)
+    pm = T.dwt2(x, levels=2, backend="xla", fuse="levels")
+    assert (np.asarray(pa.ll) == np.asarray(pm.ll)).all()
+
+
+def test_auto_cache_key_stays_auto(store):
+    """Repeated auto traffic hits the plan cache under the *auto* key —
+    the resolution is not re-run per call."""
+    cache = E.PlanCache()
+    before = dict(PA.AUTO_COUNTERS)
+    p1 = E.get_plan(shape=(2, 32, 32), levels=2, backend="auto",
+                    cache=cache)
+    p2 = E.get_plan(shape=(2, 32, 32), levels=2, backend="auto",
+                    cache=cache)
+    assert p2 is p1
+    assert cache.stats() == {"hits": 1, "misses": 1, "size": 1,
+                             "maxsize": cache.maxsize}
+    delta = sum(PA.AUTO_COUNTERS.values()) - sum(before.values())
+    assert delta == 1                      # one resolution, not two
+
+
+def test_auto_backend_never_executes_directly():
+    from repro.engine import backends as B
+    bk = B.get_backend("auto")
+    with pytest.raises(ValueError):
+        bk.make_forward(None)
+
+
+def test_stats_surfaces_auto_and_block_table():
+    s = E.stats()
+    assert sorted(s["auto"]) == ["choices", "cold_fallbacks",
+                                 "predictions", "store_hits"]
+    assert "device_fallbacks" in s["block_table"]
+    assert any(r["backend"] == "auto" for r in s["backends"])
