@@ -16,18 +16,22 @@ Sections:
   5. auto     — profile-guided selection: warm the trace store on a
                 small grid, assert ``backend="auto"`` picks within 10%
                 of the best manual (backend, fuse) per cell, report
-                cost-model prediction error (the BENCH_6 CI gate).
-  6. compress — DWT gradient compression (framework integration).
-  7. roofline — per-(arch x shape x mesh) summary from the dry-run
+                cost-model prediction error (a BENCH_7 CI gate).
+  6. serve    — serving runtime: batched DwtServer vs per-request
+                dispatch at concurrency 16; gates speedup >= 2x and
+                bit-identical coefficients (a BENCH_7 CI gate).
+  7. compress — DWT gradient compression (framework integration).
+  8. roofline — per-(arch x shape x mesh) summary from the dry-run
                 artifacts (if present).
 
 ``--json PATH`` additionally writes every section's rows as a single
 machine-readable document (throughput numbers, op counts, and the
 op-count regression verdict), plus run metadata (device kind, platform,
 jax/jaxlib versions, interpret-mode flag) so artifacts and profiler
-traces are attributable across machines, for CI trend tracking:
+traces are attributable across machines, for CI trend tracking.  CI is
+the single writer of the committed artifact (``BENCH_7.json``):
 
-    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_6.json
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_7.json
 
 ``--backends`` limits the *measured* backends to a comma-separated
 subset of the registered ones (the analytic sections are
@@ -119,6 +123,17 @@ def main() -> None:
         "backend='auto' output != chosen backend output"
 
     print("=" * 72)
+    from benchmarks import serve_bench
+    doc["serve"] = serve_bench.serve_bench(quick=quick)
+    # CI gates: the batched server must at least double per-request
+    # throughput at concurrency 16, serving bitwise-identical results
+    assert doc["serve"]["parity_bit_identical"], \
+        "served coefficients != direct dwt2 coefficients"
+    assert doc["serve"]["speedup"] >= serve_bench.SPEEDUP_GATE, \
+        (f"batched serving speedup {doc['serve']['speedup']:.2f}x below "
+         f"the {serve_bench.SPEEDUP_GATE}x gate")
+
+    print("=" * 72)
     from benchmarks import compression_bench
     compression_bench.main()
 
@@ -147,6 +162,11 @@ def main() -> None:
     print(f"# block table: "
           f"{stats['block_table']['device_fallbacks']} device-mismatch "
           f"fallbacks")
+    srv = stats["serve"]
+    if srv["served"]:
+        print(f"# serve: {srv['served']} requests / {srv['batches']} "
+              f"batches, occupancy {srv['mean_occupancy']:.2f}, "
+              f"p50 {srv['p50_ms']:.2f} ms, p99 {srv['p99_ms']:.2f} ms")
     for row in stats["plans"]:
         tiling = (f" tiles={row['tile_grid']}x{row['tiles']} "
                   f"margin={row['halo_margin']}" if "tiles" in row else "")

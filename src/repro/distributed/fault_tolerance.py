@@ -48,11 +48,16 @@ class FaultToleranceConfig:
 class HostState:
     last_heartbeat: float
     step: int = 0
+    # set by mark_dead(): a death *reported* by the runtime (a crashed
+    # serving worker, a coordinator RPC error) rather than inferred
+    # from heartbeat age — the host counts as dead immediately
+    marked_dead: bool = False
 
 
 class HeartbeatTracker:
     """Coordinator-side liveness bookkeeping (pure logic; transport is the
-    cluster's RPC layer / jax.distributed in production)."""
+    cluster's RPC layer / jax.distributed in production — and, in
+    ``repro.serve``, the scheduler's worker tasks beating in-process)."""
 
     def __init__(self, hosts: List[str],
                  cfg: Optional[FaultToleranceConfig] = None,
@@ -63,21 +68,33 @@ class HeartbeatTracker:
         self.hosts: Dict[str, HostState] = {
             h: HostState(last_heartbeat=now) for h in hosts}
 
+    def register(self, host: str) -> None:
+        """Add a host mid-run (elastic grow / replacement worker)."""
+        self.hosts[host] = HostState(last_heartbeat=self.clock())
+
     def beat(self, host: str, step: int) -> None:
         st = self.hosts[host]
         st.last_heartbeat = self.clock()
         st.step = step
+        st.marked_dead = False          # a beating host is alive again
+
+    def mark_dead(self, host: str) -> None:
+        """Report a death detected out-of-band (crash, RPC failure) —
+        takes effect immediately, without waiting out ``hard_timeout_s``."""
+        self.hosts[host].marked_dead = True
 
     def stragglers(self) -> List[str]:
         now = self.clock()
         return [h for h, st in self.hosts.items()
-                if self.cfg.soft_timeout_s
+                if not st.marked_dead
+                and self.cfg.soft_timeout_s
                 <= now - st.last_heartbeat < self.cfg.hard_timeout_s]
 
     def dead(self) -> List[str]:
         now = self.clock()
         return [h for h, st in self.hosts.items()
-                if now - st.last_heartbeat >= self.cfg.hard_timeout_s]
+                if st.marked_dead
+                or now - st.last_heartbeat >= self.cfg.hard_timeout_s]
 
     def have_quorum(self) -> bool:
         alive = len(self.hosts) - len(self.dead()) - len(self.stragglers())

@@ -125,15 +125,19 @@ def stats() -> dict:
     auto-backend counters (cost-model predictions, store hits,
     cold-start fallbacks, chosen-config histogram), block-table
     device-mismatch fallbacks, the registered-backend capability matrix,
-    plus one row per cached plan (steps, kernel launches, compiled
-    tap-program op counts, tile counts, pyramid window geometry, the
-    auto-resolved choice) — what benchmarks and production dashboards
-    need to see at a glance.
+    serving-runtime counters (p50/p99 request latency, served img/s,
+    batch occupancy, backpressure/re-dispatch counts — see
+    :mod:`repro.serve`), plus one row per cached plan (steps, kernel
+    launches, compiled tap-program op counts, tile counts, pyramid
+    window geometry, the auto-resolved choice) — what benchmarks and
+    production dashboards need to see at a glance.
 
     >>> from repro import engine
     >>> s = engine.stats()
     >>> sorted(s)
-    ['auto', 'backends', 'block_table', 'plan_cache', 'plans', 'pyramid']
+    ['auto', 'backends', 'block_table', 'plan_cache', 'plans', 'pyramid', 'serve']
+    >>> sorted(k for k in s['serve'] if k.startswith('p'))
+    ['p50_ms', 'p99_ms', 'padded_images']
     >>> [row["backend"] for row in s["backends"]]
     ['auto', 'jnp', 'pallas', 'xla']
     >>> sorted(s["auto"])
@@ -143,6 +147,7 @@ def stats() -> dict:
     from repro.engine import backends as B
     from repro.engine import plan as P
     from repro.profiler import auto as PA
+    from repro.serve import metrics as SM
     with _GLOBAL._lock:
         items = list(_GLOBAL._plans.items())
     plans = []
@@ -183,4 +188,5 @@ def stats() -> dict:
             "block_table": {"device_fallbacks":
                             AT.COUNTERS["device_fallbacks"],
                             "path": str(AT.table_path())},
-            "backends": list(B.capability_matrix()), "plans": plans}
+            "backends": list(B.capability_matrix()),
+            "serve": SM.serve_stats(), "plans": plans}

@@ -25,12 +25,13 @@ from repro.profiler.auto import (AUTO_COUNTERS, AutoChoice, auto_stats,
 from repro.profiler.model import CostModel, config_features
 from repro.profiler.store import (STORE_ENV, TraceRecord, TraceStore,
                                   runtime_meta, store_path)
-from repro.profiler.trace import measure_plan, profile_plan, warm_store
+from repro.profiler.trace import (measure_plan, profile_plan, warm_batches,
+                                  warm_store)
 
 __all__ = [
     "TraceRecord", "TraceStore", "store_path", "runtime_meta", "STORE_ENV",
     "CostModel", "config_features",
-    "measure_plan", "profile_plan", "warm_store",
+    "measure_plan", "profile_plan", "warm_store", "warm_batches",
     "AutoChoice", "choose", "enumerate_candidates", "auto_stats",
     "reset_counters", "AUTO_COUNTERS",
 ]

@@ -92,3 +92,19 @@ def warm_store(shape=(1, 64, 64), wavelet: str = "cdf97",
         plan = E.build_plan(concrete)
         records.append(profile_plan(plan, reps=reps, store=store))
     return records
+
+
+def warm_batches(batches, shape_hw, **kwargs) -> List[ST.TraceRecord]:
+    """Warm one image geometry at several batch sizes (the serving
+    runtime's padded shape-buckets stack requests onto the leading
+    batch dim, so its ``backend="auto"`` resolutions look up
+    ``(b, H, W)`` shapes — one per padded batch size).
+
+    ``batches`` is an iterable of leading batch sizes (e.g.
+    ``repro.serve.bucket_batches(max_batch)``); remaining keyword
+    arguments are forwarded to :func:`warm_store`."""
+    h, w = int(shape_hw[0]), int(shape_hw[1])
+    records = []
+    for b in batches:
+        records.extend(warm_store(shape=(int(b), h, w), **kwargs))
+    return records

@@ -1,0 +1,28 @@
+"""``repro.serve`` — async shape-bucketed request batching over the
+plan cache (the serving runtime; see docs/serving.md).
+
+Concurrent transform requests coalesce into padded shape-buckets and
+execute as ONE batched cached plan per bucket — the batch dimension is
+a free leading dim on every registered backend, so a server at high
+concurrency multiplies per-image throughput over per-request dispatch
+without changing a single coefficient:
+
+    from repro.serve import DwtServer, ServeConfig
+
+    async with DwtServer(ServeConfig(max_batch=16)) as srv:
+        pyr = await srv.submit(img, scheme="ns-polyconv", levels=3)
+
+Counters surface in ``repro.engine.stats()["serve"]``.
+"""
+from repro.serve.bucket import (BucketKey, BucketSpec, Request,
+                                bucket_batches, padded_batch)
+from repro.serve.metrics import METRICS, reset as reset_metrics, serve_stats
+from repro.serve.scheduler import (DwtServer, QueueFullError, ServeConfig,
+                                   WorkerDied, serve_map)
+
+__all__ = [
+    "DwtServer", "ServeConfig", "QueueFullError", "WorkerDied",
+    "serve_map",
+    "BucketKey", "BucketSpec", "Request", "padded_batch", "bucket_batches",
+    "METRICS", "serve_stats", "reset_metrics",
+]

@@ -1,0 +1,189 @@
+"""Shape-bucket algebra for the serving scheduler.
+
+A *bucket* is the unit of coalescing: every request that can legally
+ride the same cached :class:`~repro.engine.plan.DwtPlan` execution maps
+to one :class:`BucketKey` — the full plan configuration plus the image
+geometry and the transform direction.  Requests inside a bucket stack
+onto the free leading batch dimension of the plan (every registered
+backend accepts batched ``(..., H, W)`` input), and the batch dimension
+is padded up to the next power of two (capped at the scheduler's
+``max_batch``) so a bucket only ever resolves ``log2(max_batch) + 1``
+distinct plans instead of one per occupancy — the plan cache stays
+warm at any traffic level.
+
+Stacking happens host-side (``np.stack`` over host buffers, one
+device transfer per batch) because that is where serving traffic
+arrives from the wire; stacking on-device would pay one dispatch per
+request — exactly the overhead batching exists to amortize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.engine.pyramid import Pyramid
+
+OPS = ("dwt2", "idwt2")
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Everything that must match for two requests to share one batched
+    plan execution: the transform direction, the image geometry (the
+    shape bucket), and every plan-key configuration field."""
+
+    op: str                 # "dwt2" | "idwt2"
+    h: int
+    w: int
+    dtype: str
+    wavelet: str
+    scheme: str
+    levels: int
+    backend: str
+    optimize: bool
+    fuse: str
+    boundary: str
+    compute_dtype: str
+    tap_opt: str
+
+    def plan_kwargs(self, batch: int) -> dict:
+        """``repro.engine.get_plan`` arguments for this bucket at one
+        padded batch size."""
+        return dict(wavelet=self.wavelet, scheme=self.scheme,
+                    levels=self.levels, shape=(batch, self.h, self.w),
+                    dtype=self.dtype, backend=self.backend,
+                    optimize=self.optimize, fuse=self.fuse,
+                    boundary=self.boundary,
+                    compute_dtype=self.compute_dtype,
+                    tap_opt=self.tap_opt)
+
+
+@dataclasses.dataclass
+class Request:
+    """One enqueued transform request."""
+
+    payload: object         # np.ndarray (dwt2) | host-side Pyramid (idwt2)
+    future: object          # asyncio.Future resolved at scatter time
+    t: float                # enqueue timestamp (event-loop clock)
+    attempts: int = 0       # dead-worker re-dispatch count
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """A declared bucket for startup warmup: the image geometry plus the
+    transform configuration the deployment expects to serve."""
+
+    shape: Tuple[int, int]            # (H, W)
+    wavelet: str = "cdf97"
+    scheme: str = "ns-polyconv"
+    levels: int = 1
+    dtype: str = "float32"
+    backend: str = "jnp"
+    optimize: bool = False
+    fuse: str = "levels"
+    boundary: str = "periodic"
+    compute_dtype: str = "float32"
+    tap_opt: str = "full"
+
+    def key(self, op: str = "dwt2") -> BucketKey:
+        return BucketKey(op=op, h=int(self.shape[0]), w=int(self.shape[1]),
+                         dtype=self.dtype, wavelet=self.wavelet,
+                         scheme=self.scheme, levels=int(self.levels),
+                         backend=self.backend, optimize=self.optimize,
+                         fuse=self.fuse, boundary=self.boundary,
+                         compute_dtype=self.compute_dtype,
+                         tap_opt=self.tap_opt)
+
+
+def padded_batch(n: int, max_batch: int) -> int:
+    """Next power of two >= n, capped at ``max_batch``: the batch sizes
+    a bucket's plans are actually built for."""
+    if n <= 0:
+        raise ValueError(f"batch must be positive, got {n}")
+    return min(max_batch, 1 << (n - 1).bit_length())
+
+
+def bucket_batches(max_batch: int) -> List[int]:
+    """Every padded batch size a bucket can execute at (warmup targets)."""
+    sizes = []
+    b = 1
+    while b < max_batch:
+        sizes.append(b)
+        b <<= 1
+    sizes.append(max_batch)
+    return sizes
+
+
+# -- host-side stacking / scattering ----------------------------------
+
+def stack_images(reqs, pad_to: int) -> np.ndarray:
+    """Stack request images host-side into a zero-padded (pad_to, H, W)
+    batch (one device transfer for the whole bucket)."""
+    xs = np.stack([r.payload for r in reqs])
+    if pad_to > len(reqs):
+        pad = np.zeros((pad_to - len(reqs),) + xs.shape[1:], xs.dtype)
+        xs = np.concatenate([xs, pad])
+    return xs
+
+
+def stack_pyramids(reqs, pad_to: int) -> Pyramid:
+    """Stack request pyramids host-side into one zero-padded batched
+    pyramid (for ``idwt2`` buckets)."""
+    lls = np.stack([r.payload.ll for r in reqs])
+    details = []
+    for lvl in range(reqs[0].payload.levels):
+        details.append(tuple(
+            np.stack([r.payload.details[lvl][band] for r in reqs])
+            for band in range(3)))
+    if pad_to > len(reqs):
+        n = pad_to - len(reqs)
+
+        def _pad(a):
+            return np.concatenate(
+                [a, np.zeros((n,) + a.shape[1:], a.dtype)])
+        lls = _pad(lls)
+        details = [tuple(_pad(d) for d in dd) for dd in details]
+    return Pyramid(ll=lls, details=details)
+
+
+def scatter_pyramid(pyr, n: int) -> List[Pyramid]:
+    """Split one batched pyramid into ``n`` per-request host pyramids.
+
+    The batch is materialized once (`np.asarray` per subband — a single
+    device->host transfer each); the per-request pyramids are zero-copy
+    views into those buffers, so scattering costs no per-request device
+    dispatch."""
+    ll = np.asarray(pyr.ll)
+    details = [tuple(np.asarray(d) for d in dd) for dd in pyr.details]
+    return [Pyramid(ll=ll[i],
+                    details=[tuple(d[i] for d in dd) for dd in details])
+            for i in range(n)]
+
+
+def scatter_images(batch, n: int) -> List[np.ndarray]:
+    """Split one batched image array into ``n`` per-request host views."""
+    arr = np.asarray(batch)
+    return [arr[i] for i in range(n)]
+
+
+def request_key(x_shape, dtype, *, op: str, wavelet: str, scheme: str,
+                levels: int, backend: str, optimize: bool, fuse: str,
+                boundary: str, compute_dtype: str,
+                tap_opt: str) -> BucketKey:
+    """Bucket key for one request.  For ``idwt2`` requests ``x_shape``
+    is the *reconstructed image* shape (``ll.shape << levels``), so both
+    directions of the same configuration share one geometry key space."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; available: {OPS}")
+    if len(x_shape) != 2:
+        raise ValueError(
+            f"serving requests are single (H, W) images; got shape "
+            f"{tuple(x_shape)} — split batches client-side (the server "
+            f"re-batches across requests)")
+    return BucketKey(op=op, h=int(x_shape[0]), w=int(x_shape[1]),
+                     dtype=str(dtype), wavelet=wavelet, scheme=scheme,
+                     levels=int(levels), backend=backend,
+                     optimize=bool(optimize), fuse=fuse, boundary=boundary,
+                     compute_dtype=compute_dtype, tap_opt=tap_opt)

@@ -1,0 +1,124 @@
+"""Serving counters: latency percentiles, throughput, batch occupancy.
+
+Leaf module (imports nothing from ``repro``) so
+``repro.engine.stats()`` can pull the ``"serve"`` section without an
+import cycle: the engine imports this module lazily at stats() time,
+while the scheduler (:mod:`repro.serve.scheduler`) pushes into the
+process-global :class:`ServeMetrics` singleton as it serves.
+
+All numbers describe the *current process* since the last
+:func:`reset` — what a production dashboard scrapes per replica.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+#: retained request latencies (newest wins) for the percentile estimate
+LATENCY_WINDOW = 8192
+
+
+def _quantile(sorted_vals, q: float) -> float:
+    return sorted_vals[min(len(sorted_vals) - 1,
+                           int(q * len(sorted_vals)))]
+
+
+class ServeMetrics:
+    """Thread-safe serving counters (workers scatter from the event loop,
+    but benches/tests may read from other threads)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            self.submitted = 0        # requests accepted into a bucket
+            self.served = 0           # requests completed successfully
+            self.failed = 0           # requests completed with an error
+            self.rejected = 0         # backpressure rejections
+            self.redispatched = 0     # requests re-queued off a dead worker
+            self.worker_deaths = 0
+            self.workers_spawned = 0  # replacement workers started
+            self.batches = 0          # coalesced plan executions
+            self.padded_images = 0    # zero-padding images executed
+            self._occupancy_sum = 0.0
+            self._lat_s = deque(maxlen=LATENCY_WINDOW)
+            self._first_ts: Optional[float] = None
+            self._last_ts: Optional[float] = None
+
+    # -- recording hooks (called by the scheduler) ---------------------
+    def request_submitted(self, n: int = 1) -> None:
+        with self._lock:
+            self.submitted += n
+            if self._first_ts is None:
+                self._first_ts = time.perf_counter()
+
+    def request_rejected(self, n: int = 1) -> None:
+        with self._lock:
+            self.rejected += n
+
+    def request_failed(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += n
+
+    def batch_done(self, real: int, padded: int, latencies_s) -> None:
+        with self._lock:
+            self.served += real
+            self.batches += 1
+            self.padded_images += max(0, padded - real)
+            self._occupancy_sum += real / max(1, padded)
+            self._lat_s.extend(latencies_s)
+            self._last_ts = time.perf_counter()
+
+    def worker_died(self, redispatched: int) -> None:
+        with self._lock:
+            self.worker_deaths += 1
+            self.redispatched += redispatched
+
+    def worker_spawned(self) -> None:
+        with self._lock:
+            self.workers_spawned += 1
+
+    # -- reading -------------------------------------------------------
+    def snapshot(self) -> dict:
+        """The ``engine.stats()["serve"]`` payload: request/batch
+        counters, p50/p99 request latency (submit -> result, ms),
+        measured served img/s over the active window, and the mean
+        batch occupancy (real images / padded batch size)."""
+        with self._lock:
+            lat = sorted(self._lat_s)
+            span = ((self._last_ts - self._first_ts)
+                    if self._first_ts is not None
+                    and self._last_ts is not None else 0.0)
+            return {
+                "submitted": self.submitted,
+                "served": self.served,
+                "failed": self.failed,
+                "rejected": self.rejected,
+                "redispatched": self.redispatched,
+                "worker_deaths": self.worker_deaths,
+                "workers_spawned": self.workers_spawned,
+                "batches": self.batches,
+                "padded_images": self.padded_images,
+                "mean_occupancy": (self._occupancy_sum / self.batches
+                                   if self.batches else None),
+                "p50_ms": (_quantile(lat, 0.50) * 1e3 if lat else None),
+                "p99_ms": (_quantile(lat, 0.99) * 1e3 if lat else None),
+                "img_per_s": (self.served / span if span > 0 else None),
+            }
+
+
+#: process-global singleton (one serving runtime per process is the
+#: expected deployment shape; tests reset() between cases)
+METRICS = ServeMetrics()
+
+
+def serve_stats() -> dict:
+    return METRICS.snapshot()
+
+
+def reset() -> None:
+    METRICS.reset()

@@ -1,0 +1,474 @@
+"""Async shape-bucketed request batching over the plan cache.
+
+The "millions of users" gap (ROADMAP item 1): the engine already proves
+offline that batching multiplies per-image throughput — the batch
+dimension is a free leading dim on every registered backend — yet every
+live caller pays its own dispatch.  :class:`DwtServer` closes the gap
+with the front-end / device-worker split of the apex-style actor
+architectures:
+
+* a **front-end** (``submit`` / ``submit_inverse``) enqueues requests
+  into shape buckets (:mod:`repro.serve.bucket`) under bounded queue
+  depth: when ``max_queue`` requests are in flight, new arrivals either
+  wait (``backpressure="wait"``) or fail fast with
+  :class:`QueueFullError` (``backpressure="reject"``);
+* a **dispatcher** coalesces each bucket until it holds ``max_batch``
+  requests or its oldest request has waited ``max_wait_ms``, then emits
+  the batch — full buckets flush immediately, so the wait bound is the
+  *worst-case* added latency, not a fixed tax;
+* **N device workers** drain emitted batches: stack host-side, pad the
+  batch dim to the bucket's plan size, execute ONE cached
+  :class:`~repro.engine.plan.DwtPlan`, and scatter per-request results
+  back to their futures (zero-copy host views — no per-request device
+  dispatch anywhere on the hot path);
+* a **heartbeat tracker**
+  (:class:`repro.distributed.fault_tolerance.HeartbeatTracker`) follows
+  worker liveness; when a worker dies its in-flight batch is
+  re-dispatched to the surviving pool and — per the tracker's elastic
+  restart decision — a replacement worker is spawned.
+
+Metrics (p50/p99 latency, served img/s, batch occupancy, backpressure
+and re-dispatch counters) stream into :mod:`repro.serve.metrics` and
+surface through ``repro.engine.stats()["serve"]``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import (FaultToleranceConfig,
+                                               HeartbeatTracker)
+from repro.engine.pyramid import Pyramid
+from repro.serve import bucket as BK
+from repro.serve.metrics import METRICS
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` under ``backpressure="reject"`` when the
+    server already holds ``max_queue`` in-flight requests."""
+
+
+class WorkerDied(RuntimeError):
+    """A device worker died (injected fault or unrecoverable crash);
+    its in-flight batch is re-dispatched."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler knobs (tuning guide: docs/serving.md).
+
+    ``max_batch``     — coalescing ceiling; also the largest padded
+                        batch size plans are built for.
+    ``max_wait_ms``   — how long a non-full bucket may age before it is
+                        flushed (the worst-case latency the batcher may
+                        add to a request).
+    ``max_queue``     — bound on accepted-but-unfinished requests.
+    ``backpressure``  — "wait" parks new submitters until capacity
+                        frees; "reject" raises :class:`QueueFullError`.
+    ``num_workers``   — device workers draining batches (each batch
+                        executes in a worker thread so the event loop
+                        keeps accepting traffic).
+    ``max_redispatch``— how many dead-worker re-dispatches one request
+                        survives before it fails.
+    """
+
+    max_batch: int = 16
+    max_wait_ms: float = 2.0
+    max_queue: int = 1024
+    backpressure: str = "wait"
+    num_workers: int = 2
+    max_redispatch: int = 2
+    soft_timeout_s: float = 1.0      # heartbeat: straggler threshold
+    hard_timeout_s: float = 30.0     # heartbeat: dead threshold
+
+    def __post_init__(self):
+        if self.backpressure not in ("wait", "reject"):
+            raise ValueError(f"backpressure must be 'wait' or 'reject', "
+                             f"got {self.backpressure!r}")
+        if self.max_batch < 1 or self.max_queue < 1 \
+                or self.num_workers < 1:
+            raise ValueError("max_batch, max_queue and num_workers must "
+                             "be >= 1")
+
+
+class DwtServer:
+    """Asyncio serving runtime over the plan-cache engine.
+
+    Use as an async context manager::
+
+        async with DwtServer(ServeConfig(max_batch=16)) as srv:
+            pyr = await srv.submit(img, scheme="ns-polyconv", levels=3)
+
+    Results are host-side (numpy subbands): the scatter path
+    materializes each batched output exactly once and hands out
+    zero-copy views, so values are bitwise what the batched plan
+    produced on device.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.cfg = config or ServeConfig()
+        self._running = False
+        self._buckets: "OrderedDict[BK.BucketKey, deque]" = OrderedDict()
+        self._buckets_seen: set = set()
+        self._pending = 0
+        self._worker_seq = 0
+        self._in_flight: Dict[str, Tuple[BK.BucketKey, list]] = {}
+        self._fail_next: set = set()
+        self._tasks: List[asyncio.Task] = []
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self.tracker: Optional[HeartbeatTracker] = None
+
+    # -- lifecycle -----------------------------------------------------
+    async def start(self) -> "DwtServer":
+        if self._running:
+            return self
+        self._loop = asyncio.get_running_loop()
+        self._arrival = asyncio.Event()
+        self._capacity = asyncio.Event()
+        self._batch_q: asyncio.Queue = asyncio.Queue()
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.cfg.num_workers,
+            thread_name_prefix="dwt-serve")
+        self.tracker = HeartbeatTracker(
+            [], FaultToleranceConfig(
+                soft_timeout_s=self.cfg.soft_timeout_s,
+                hard_timeout_s=self.cfg.hard_timeout_s,
+                quorum_fraction=0.5),
+            clock=time.monotonic)
+        self._running = True
+        self._tasks = [self._loop.create_task(self._dispatch_loop(),
+                                              name="dwt-serve-dispatch")]
+        for _ in range(self.cfg.num_workers):
+            self._spawn_worker(initial=True)
+        return self
+
+    def _spawn_worker(self, initial: bool = False) -> str:
+        name = f"worker-{self._worker_seq}"
+        self._worker_seq += 1
+        self.tracker.register(name)
+        self._tasks.append(
+            self._loop.create_task(self._run_worker(name), name=name))
+        if not initial:
+            METRICS.worker_spawned()
+        return name
+
+    async def stop(self, drain: bool = True) -> None:
+        if not self._running:
+            return
+        if drain:
+            while self._pending:
+                self._flush_requested = True
+                self._arrival.set()
+                self._capacity.clear()
+                if self._pending:
+                    try:
+                        await asyncio.wait_for(self._capacity.wait(), 0.1)
+                    except asyncio.TimeoutError:
+                        pass
+        self._running = False
+        for t in self._tasks:
+            t.cancel()
+        await asyncio.gather(*self._tasks, return_exceptions=True)
+        self._tasks = []
+        self._pool.shutdown(wait=False)
+
+    async def __aenter__(self) -> "DwtServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=exc[0] is None)
+
+    # -- front-end -----------------------------------------------------
+    async def submit(self, x, *, wavelet: str = "cdf97",
+                     scheme: str = "ns-polyconv", levels: int = 1,
+                     backend: str = "jnp", optimize: bool = False,
+                     fuse: str = "levels", boundary: str = "periodic",
+                     compute_dtype: str = "float32",
+                     tap_opt: str = "full") -> Pyramid:
+        """Enqueue one forward transform of a single (H, W) image;
+        resolves to the host-side :class:`Pyramid` once its bucket's
+        batched plan execution scatters."""
+        x = np.asarray(x)
+        key = BK.request_key(
+            x.shape, x.dtype, op="dwt2", wavelet=wavelet, scheme=scheme,
+            levels=levels, backend=backend, optimize=optimize, fuse=fuse,
+            boundary=boundary, compute_dtype=compute_dtype, tap_opt=tap_opt)
+        return await self._submit(key, x)
+
+    async def submit_inverse(self, pyr: Pyramid, *,
+                             wavelet: str = "cdf97",
+                             scheme: str = "ns-polyconv",
+                             backend: str = "jnp",
+                             optimize: bool = False,
+                             fuse: str = "levels",
+                             boundary: str = "periodic",
+                             compute_dtype: str = "float32",
+                             tap_opt: str = "full") -> np.ndarray:
+        """Enqueue one inverse transform of a single-image pyramid;
+        resolves to the reconstructed host-side (H, W) array."""
+        host = Pyramid(
+            ll=np.asarray(pyr.ll),
+            details=[tuple(np.asarray(d) for d in dd)
+                     for dd in pyr.details])
+        levels = host.levels
+        shape = (host.ll.shape[-2] << levels, host.ll.shape[-1] << levels)
+        key = BK.request_key(
+            shape, host.ll.dtype, op="idwt2", wavelet=wavelet,
+            scheme=scheme, levels=levels, backend=backend,
+            optimize=optimize, fuse=fuse, boundary=boundary,
+            compute_dtype=compute_dtype, tap_opt=tap_opt)
+        return await self._submit(key, host)
+
+    async def _submit(self, key: BK.BucketKey, payload):
+        if not self._running:
+            raise RuntimeError("DwtServer is not running; use "
+                               "'async with DwtServer(...)' or await "
+                               "server.start()")
+        if self._pending >= self.cfg.max_queue:
+            if self.cfg.backpressure == "reject":
+                METRICS.request_rejected()
+                raise QueueFullError(
+                    f"{self._pending} requests in flight >= max_queue="
+                    f"{self.cfg.max_queue} (backpressure='reject')")
+            while self._pending >= self.cfg.max_queue:
+                self._capacity.clear()
+                await self._capacity.wait()
+        self._pending += 1
+        METRICS.request_submitted()
+        fut = self._loop.create_future()
+        req = BK.Request(payload=payload, future=fut, t=self._loop.time())
+        try:
+            self._buckets.setdefault(key, deque()).append(req)
+            self._buckets_seen.add(key)
+            self._arrival.set()
+            return await fut
+        finally:
+            self._pending -= 1
+            self._capacity.set()
+
+    def flush(self) -> None:
+        """Force every non-empty bucket to dispatch now, ignoring the
+        coalescing window (ops hook; also used on drain)."""
+        self._flush_requested = True
+        if self._running:
+            self._arrival.set()
+
+    # -- warmup --------------------------------------------------------
+    def warmup(self, specs: Sequence[BK.BucketSpec],
+               warm_profiler: bool = False, reps: int = 1,
+               candidates=None) -> int:
+        """Prefetch plans (and optionally profiler traces) for declared
+        buckets so the first request of each is a plan-cache hit.
+
+        Every padded batch size the bucket can execute at
+        (:func:`repro.serve.bucket.bucket_batches`) is resolved through
+        ``repro.engine.get_plan``.  With ``warm_profiler=True`` each
+        batched shape is first measured into the profiler trace store
+        (:func:`repro.profiler.trace.warm_store`) so
+        ``backend="auto"`` buckets resolve from measurements instead of
+        the cold-start heuristic; ``candidates`` narrows the measured
+        ``(backend, fuse, tap_opt)`` sweep.  Returns the number of
+        plans resolved."""
+        from repro import engine as E
+        n = 0
+        for spec in specs:
+            for b in BK.bucket_batches(self.cfg.max_batch):
+                if warm_profiler:
+                    from repro.profiler import warm_batches
+                    warm_batches([b], spec.shape, wavelet=spec.wavelet,
+                                 scheme=spec.scheme, levels=spec.levels,
+                                 dtype=spec.dtype, optimize=spec.optimize,
+                                 compute_dtype=spec.compute_dtype,
+                                 reps=reps, candidates=candidates)
+                E.get_plan(**spec.key().plan_kwargs(b))
+                n += 1
+        return n
+
+    # -- dispatcher ----------------------------------------------------
+    _flush_requested = False
+
+    async def _dispatch_loop(self) -> None:
+        max_wait_s = self.cfg.max_wait_ms / 1e3
+        while True:
+            now = self._loop.time()
+            deadline = None
+            flush = self._flush_requested
+            self._flush_requested = False
+            for key in list(self._buckets):
+                dq = self._buckets[key]
+                while len(dq) >= self.cfg.max_batch:
+                    self._emit(key, [dq.popleft()
+                                     for _ in range(self.cfg.max_batch)])
+                if not dq:
+                    del self._buckets[key]
+                    continue
+                due = dq[0].t + max_wait_s
+                if flush or due <= now:
+                    self._emit(key, [dq.popleft() for _ in range(len(dq))])
+                    del self._buckets[key]
+                else:
+                    deadline = due if deadline is None \
+                        else min(deadline, due)
+            try:
+                if deadline is None:
+                    await self._arrival.wait()
+                else:
+                    await asyncio.wait_for(self._arrival.wait(),
+                                           max(0.0, deadline - now))
+            except asyncio.TimeoutError:
+                pass
+            self._arrival.clear()
+
+    def _emit(self, key: BK.BucketKey, reqs: list) -> None:
+        self._batch_q.put_nowait((key, reqs))
+
+    # -- workers -------------------------------------------------------
+    async def _run_worker(self, name: str) -> None:
+        try:
+            await self._worker_loop(name)
+        except asyncio.CancelledError:
+            raise
+        except WorkerDied as e:
+            self._on_worker_death(name, str(e))
+
+    async def _worker_loop(self, name: str) -> None:
+        idle_beat = max(0.05, self.cfg.soft_timeout_s / 2)
+        step = 0
+        while True:
+            try:
+                key, reqs = await asyncio.wait_for(self._batch_q.get(),
+                                                   timeout=idle_beat)
+            except asyncio.TimeoutError:
+                self.tracker.beat(name, step)
+                continue
+            self.tracker.beat(name, step)
+            self._in_flight[name] = (key, reqs)
+            if name in self._fail_next:
+                self._fail_next.discard(name)
+                raise WorkerDied(f"{name}: injected failure")
+            try:
+                outs, padded = await self._loop.run_in_executor(
+                    self._pool, self._execute_batch, key, reqs)
+            except Exception as e:
+                # an execution error (bad geometry, backend reject, ...)
+                # fails this batch's requests; the worker itself survives
+                self._in_flight.pop(name, None)
+                METRICS.request_failed(len(reqs))
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                continue
+            self._in_flight.pop(name, None)
+            now = self._loop.time()
+            METRICS.batch_done(real=len(reqs), padded=padded,
+                               latencies_s=[now - r.t for r in reqs])
+            for r, out in zip(reqs, outs):
+                if not r.future.done():
+                    r.future.set_result(out)
+            step += 1
+            self.tracker.beat(name, step)
+
+    def _on_worker_death(self, name: str, reason: str) -> None:
+        """Dead worker: re-dispatch its in-flight bucket to the
+        surviving pool and, per the fault-tolerance decision function,
+        spawn an elastic replacement."""
+        self.tracker.mark_dead(name)
+        in_flight = self._in_flight.pop(name, None)
+        survivors = []
+        if in_flight is not None:
+            key, reqs = in_flight
+            for r in reqs:
+                r.attempts += 1
+                if r.attempts > self.cfg.max_redispatch:
+                    METRICS.request_failed()
+                    if not r.future.done():
+                        r.future.set_exception(WorkerDied(
+                            f"request dropped after {r.attempts} "
+                            f"dispatch attempts ({reason})"))
+                else:
+                    survivors.append(r)
+        METRICS.worker_died(redispatched=len(survivors))
+        if survivors:
+            self._batch_q.put_nowait((key, survivors))
+        if self._running and self.tracker.should_restart_elastic():
+            self._spawn_worker()
+
+    def inject_worker_failure(self, name: Optional[str] = None) -> str:
+        """Test/ops hook: make one worker die when it next claims a
+        batch (its in-flight requests must be re-dispatched and served
+        by the surviving pool)."""
+        if name is None:
+            name = next(n for n in self.tracker.hosts
+                        if n not in self.tracker.dead())
+        self._fail_next.add(name)
+        return name
+
+    # -- batched execution (worker thread) ----------------------------
+    def _execute_batch(self, key: BK.BucketKey, reqs: list):
+        import jax.numpy as jnp
+
+        from repro import engine as E
+        n = len(reqs)
+        b = BK.padded_batch(n, self.cfg.max_batch)
+        plan = E.get_plan(**key.plan_kwargs(b))
+        if key.op == "dwt2":
+            xs = BK.stack_images(reqs, b)
+            pyr = plan.execute(jnp.asarray(xs))
+            return BK.scatter_pyramid(pyr, n), b
+        host = BK.stack_pyramids(reqs, b)
+        dev = Pyramid(ll=jnp.asarray(host.ll),
+                      details=[tuple(jnp.asarray(d) for d in dd)
+                               for dd in host.details])
+        out = plan.execute_inverse(dev)
+        return BK.scatter_images(out, n), b
+
+    # -- observability -------------------------------------------------
+    def stats(self) -> dict:
+        """Instance-level view (the process-wide counters live in
+        ``repro.engine.stats()["serve"]``): queue depths, bucket
+        population, and worker liveness from the heartbeat tracker."""
+        workers = {"alive": [], "stragglers": [], "dead": []}
+        if self.tracker is not None:
+            dead = set(self.tracker.dead())
+            strag = set(self.tracker.stragglers())
+            for h in self.tracker.hosts:
+                workers["dead" if h in dead else
+                        "stragglers" if h in strag else "alive"].append(h)
+        return {
+            "running": self._running,
+            "pending": self._pending,
+            "queued_batches": (self._batch_q.qsize()
+                               if self._running else 0),
+            "open_buckets": len(self._buckets),
+            "buckets_seen": len(self._buckets_seen),
+            "workers": workers,
+        }
+
+
+def serve_map(inputs, *, config: Optional[ServeConfig] = None,
+              concurrency: int = 16, warmup=None, **transform_kw):
+    """Convenience front door for scripts and examples: serve every
+    array in ``inputs`` through one :class:`DwtServer` with at most
+    ``concurrency`` requests in flight, returning the per-input
+    pyramids in order.  ``warmup`` optionally passes
+    :class:`~repro.serve.bucket.BucketSpec` s to prefetch before
+    traffic starts.  (Real deployments keep a long-lived server; this
+    spins one up around a single wave of traffic.)"""
+    async def _run():
+        srv = DwtServer(config)
+        if warmup:
+            srv.warmup(warmup)
+        async with srv:
+            sem = asyncio.Semaphore(concurrency)
+
+            async def one(x):
+                async with sem:
+                    return await srv.submit(x, **transform_kw)
+            return await asyncio.gather(*[one(x) for x in inputs])
+    return asyncio.run(_run())

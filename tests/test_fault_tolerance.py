@@ -40,6 +40,32 @@ def test_heartbeat_straggler_and_dead():
     assert tr.should_restart_elastic()
 
 
+def test_mark_dead_and_register_interact_with_quorum():
+    """Serving extensions: an out-of-band death (mark_dead) counts
+    immediately — no waiting out hard_timeout_s — and is excluded from
+    the straggler set; register() adds replacement hosts mid-run and
+    they participate in the quorum fraction."""
+    clock = FakeClock()
+    ft = FaultToleranceConfig(soft_timeout_s=10, hard_timeout_s=100,
+                              quorum_fraction=0.75)
+    tr = HeartbeatTracker(["h0", "h1", "h2", "h3"], ft, clock=clock)
+    tr.mark_dead("h2")
+    tr.mark_dead("h3")
+    assert sorted(tr.dead()) == ["h2", "h3"]   # fresh beats, dead anyway
+    assert tr.should_restart_elastic()
+    assert not tr.have_quorum()            # 2/4 alive < 0.75 * 4
+    clock.t = 20.0                         # everyone silent 20s
+    for h in ("h0", "h1"):
+        tr.beat(h, step=1)
+    assert tr.stragglers() == []           # h2/h3 are dead, not straggling
+    tr.register("h4")                      # elastic replacement
+    assert "h4" in tr.hosts and "h4" not in tr.dead()
+    assert not tr.have_quorum()            # 3/5 alive < 0.75 * 5
+    tr.beat("h3", step=2)                  # a beating host revives
+    assert tr.dead() == ["h2"]
+    assert tr.have_quorum()                # 4/5 alive >= 0.75 * 5
+
+
 def test_train_crash_restart_replays_exactly(tmp_path):
     """Run 6 steps; separately run 3, 'crash', resume to 6 — the loss
     trajectory must be identical (checkpoint + deterministic pipeline)."""

@@ -1,0 +1,72 @@
+"""LM decode-path edge cases: SWA ring-buffer rollover, long decode, and
+the 40-cell registry accounting (moved from test_serving.py, which now
+covers the repro.serve DWT serving runtime)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ALL_SHAPES
+from repro.configs.registry import ARCH_IDS, all_cells, get_config
+from repro.models import lm
+
+
+def test_swa_ring_buffer_rollover_matches_full_forward():
+    """Decode past the sliding window: the ring buffer must keep exactly
+    the last `window` keys — logits must match a full forward whose mask
+    also only sees the window."""
+    cfg, _ = get_config("mixtral-8x7b", smoke=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0, dtype="float32",
+                              sliding_window=8)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 21), 0,
+                              cfg.vocab_size)
+
+    # decode tokens one by one from scratch (pos 0..19), predict pos 20
+    cache = lm.init_decode_cache(cfg, 2, 32)
+    assert cache["kv"]["k"].shape[2] == 8  # ring = window
+    lg = None
+    for t in range(20):
+        lg, cache = lm.decode_step(params, cache, toks[:, t:t + 1], cfg)
+
+    logits_full, _ = lm.forward(params, toks[:, :20], cfg)
+    err = float(jnp.max(jnp.abs(
+        jax.nn.log_softmax(lg) - jax.nn.log_softmax(logits_full[:, 19]))))
+    assert err < 2e-2, f"ring-buffer decode diverges after rollover: {err}"
+
+
+def test_registry_cell_accounting():
+    """The assigned grid is 10 archs x 4 shapes = 40 cells; skips are
+    exactly the documented long_500k exclusions."""
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [(a, s.name) for a, s, r in cells if r is not None]
+    assert all(s == "long_500k" for _, s in skips)
+    assert len(skips) == 7  # 10 - (zamba2, rwkv6, mixtral)
+    runnable = [(a, s.name) for a, s, r in cells if r is None]
+    assert ("mixtral-8x7b", "long_500k") in runnable
+    assert ("rwkv6-3b", "long_500k") in runnable
+    assert ("zamba2-2.7b", "long_500k") in runnable
+
+
+def test_all_archs_have_smoke_and_full():
+    assert len(ARCH_IDS) == 10
+    for arch in ARCH_IDS:
+        full, run = get_config(arch)
+        smoke, _ = get_config(arch, smoke=True)
+        assert full.n_params() > 50 * smoke.n_params(), arch
+        assert full.family == smoke.family
+
+
+def test_decode_cache_dtype_and_positions():
+    cfg, _ = get_config("minitron-8b", smoke=True)
+    cache = lm.init_decode_cache(cfg, 3, 64)
+    assert int(cache["pos"]) == 0
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.zeros((3, 1), jnp.int32)
+    _, c1 = lm.decode_step(params, cache, tok, cfg)
+    assert int(c1["pos"]) == 1
+    _, c2 = lm.decode_step(params, c1, tok, cfg)
+    assert int(c2["pos"]) == 2
