@@ -1,0 +1,161 @@
+"""Regression gate: diff two ``benchmarks.run --json`` documents.
+
+    PYTHONPATH=src python -m benchmarks.compare_bench BASELINE.json NEW.json \
+        [--gate 0.15] [--strict]
+
+Compares the throughput story of a fresh bench run against a committed
+baseline (``BENCH_8.json``) and exits non-zero when anything regressed
+by more than ``--gate`` (default 15%).
+
+Two comparison modes, because the baseline and the new run usually come
+from *different machines* (a committed artifact vs a CI runner):
+
+* **default (machine-relative)** — absolute img/s numbers are not
+  comparable across hosts, so each document's throughput metrics are
+  first normalized by that document's own geometric mean over the
+  metrics both documents share.  What is gated is the *shape* of the
+  performance profile (did serving regress relative to the engine?
+  did tiling fall off?), plus the dimensionless ratios the suite
+  already computes per-host (batched-vs-seed speedups per backend,
+  the serve speedup) which are directly comparable.
+* **``--strict`` (absolute)** — additionally gates raw img/s metric by
+  metric; only meaningful when both documents come from the same
+  machine.  When the device fingerprints differ, strict failures are
+  downgraded to warnings (exit 0) so a CI runner change cannot hard-
+  fail the build on hardware it never promised.
+
+Regression means *worse*: every gated metric here is
+higher-is-better, so the verdict is ``new / old < 1 - gate``.
+Improvements never fail.  Metrics present in only one document are
+reported but not gated (quick vs full runs measure different grids).
+"""
+import json
+import math
+import sys
+
+
+def _flag_value(name, default=None):
+    if name not in sys.argv:
+        return default
+    i = sys.argv.index(name)
+    if i + 1 >= len(sys.argv):
+        raise SystemExit(f"{name} requires an argument")
+    return sys.argv[i + 1]
+
+
+def throughput_metrics(doc: dict) -> dict:
+    """Flat ``name -> img/s`` map of every measured throughput in a
+    ``benchmarks.run --json`` document (absolute, machine-dependent)."""
+    m = {}
+    for r in doc.get("engine", {}).get("rows", []):
+        m[f"engine/{r['backend']}/batch{r['batch']}"] = r["engine_img_per_s"]
+    for r in doc.get("tiling", []) or []:
+        m[f"tiling/{r['path']}"] = r["img_per_s"]
+    for r in doc.get("pyramid", {}).get("rows", []):
+        m[f"pyramid/fuse={r['fuse']}"] = r["img_per_s"]
+    srv = doc.get("serve", {})
+    if "serve_img_per_s" in srv:
+        m["serve/batched"] = srv["serve_img_per_s"]
+        m["serve/per-request"] = srv["baseline_img_per_s"]
+    return m
+
+
+def ratio_metrics(doc: dict) -> dict:
+    """Dimensionless higher-is-better ratios — comparable across
+    machines, gated in both modes."""
+    m = {}
+    for backend, s in (doc.get("engine", {}).get("speedups") or {}).items():
+        if s is not None:
+            m[f"speedup/engine/{backend}"] = s
+    srv = doc.get("serve", {})
+    if srv.get("speedup") is not None:
+        m["speedup/serve"] = srv["speedup"]
+    return m
+
+
+def _normalize(metrics: dict, shared_keys) -> dict:
+    """Divide each metric by the geometric mean over ``shared_keys`` —
+    removes the host's absolute speed, keeps the profile's shape."""
+    vals = [metrics[k] for k in shared_keys if metrics.get(k, 0) > 0]
+    if not vals:
+        return {}
+    g = math.exp(sum(math.log(v) for v in vals) / len(vals))
+    return {k: v / g for k, v in metrics.items() if v > 0}
+
+
+def compare(base: dict, new: dict, gate: float = 0.15,
+            strict: bool = False) -> tuple:
+    """Returns ``(rows, failures, warnings)``; a row is
+    ``(metric, old, new, ratio, verdict)``."""
+    rows, failures, warnings = [], [], []
+
+    def check(kind, old_m, new_m, fail_list):
+        shared = sorted(set(old_m) & set(new_m))
+        for k in shared:
+            old, cur = old_m[k], new_m[k]
+            if not (old > 0):
+                continue
+            ratio = cur / old
+            ok = ratio >= 1.0 - gate
+            rows.append((f"{kind}:{k}", old, cur, ratio, ok))
+            if not ok:
+                fail_list.append(
+                    f"{kind}:{k} regressed {100 * (1 - ratio):.1f}% "
+                    f"({old:.3g} -> {cur:.3g}, gate {100 * gate:.0f}%)")
+        return shared
+
+    check("ratio", ratio_metrics(base), ratio_metrics(new), failures)
+
+    tb, tn = throughput_metrics(base), throughput_metrics(new)
+    shared = sorted(set(tb) & set(tn))
+    check("relative", _normalize(tb, shared), _normalize(tn, shared),
+          failures)
+
+    fp_base = (base.get("meta") or {}).get("fingerprint")
+    fp_new = (new.get("meta") or {}).get("fingerprint")
+    same_host = fp_base is not None and fp_base == fp_new
+    if strict:
+        # absolute img/s only hard-fails when the host is the same one
+        check("absolute", tb, tn, failures if same_host else warnings)
+        if not same_host:
+            warnings.insert(0, f"device fingerprints differ "
+                                f"({fp_base!r} vs {fp_new!r}): absolute "
+                                f"regressions reported as warnings only")
+    return rows, failures, warnings
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    if len(args) != 2:
+        raise SystemExit(__doc__)
+    gate = float(_flag_value("--gate", "0.15"))
+    strict = "--strict" in sys.argv
+    with open(args[0]) as f:
+        base = json.load(f)
+    with open(args[1]) as f:
+        new = json.load(f)
+    rows, failures, warnings = compare(base, new, gate=gate, strict=strict)
+    if not rows:
+        raise SystemExit("no shared throughput metrics between the two "
+                         "documents — nothing to gate")
+    print(f"# compare_bench: {args[0]} (baseline) vs {args[1]} "
+          f"(gate {100 * gate:.0f}%, "
+          f"{'strict' if strict else 'machine-relative'})")
+    print("metric,baseline,new,ratio,verdict")
+    for name, old, cur, ratio, ok in rows:
+        print(f"{name},{old:.4g},{cur:.4g},{ratio:.3f},"
+              f"{'ok' if ok else 'REGRESSED'}")
+    for w in warnings:
+        print(f"# WARNING: {w}")
+    if failures:
+        print(f"# FAIL: {len(failures)} metric(s) regressed > "
+              f"{100 * gate:.0f}%")
+        for f_ in failures:
+            print(f"#   {f_}")
+        raise SystemExit(1)
+    print(f"# OK: {sum(1 for r in rows if r[4])} metric(s) within the "
+          f"{100 * gate:.0f}% gate")
+
+
+if __name__ == "__main__":
+    main()

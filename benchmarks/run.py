@@ -1,7 +1,7 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH] \
-        [--backends jnp,pallas,xla]
+        [--backends jnp,pallas,xla] [--trace PATH]
 
 Sections:
   1. table1   — paper Table 1 (steps + operation counts), exact-match vs
@@ -16,10 +16,10 @@ Sections:
   5. auto     — profile-guided selection: warm the trace store on a
                 small grid, assert ``backend="auto"`` picks within 10%
                 of the best manual (backend, fuse) per cell, report
-                cost-model prediction error (a BENCH_7 CI gate).
+                cost-model prediction error (a BENCH_8 CI gate).
   6. serve    — serving runtime: batched DwtServer vs per-request
                 dispatch at concurrency 16; gates speedup >= 2x and
-                bit-identical coefficients (a BENCH_7 CI gate).
+                bit-identical coefficients (a BENCH_8 CI gate).
   7. compress — DWT gradient compression (framework integration).
   8. roofline — per-(arch x shape x mesh) summary from the dry-run
                 artifacts (if present).
@@ -28,10 +28,19 @@ Sections:
 machine-readable document (throughput numbers, op counts, and the
 op-count regression verdict), plus run metadata (device kind, platform,
 jax/jaxlib versions, interpret-mode flag) so artifacts and profiler
-traces are attributable across machines, for CI trend tracking.  CI is
-the single writer of the committed artifact (``BENCH_7.json``):
+traces are attributable across machines, for CI trend tracking.  The
+document embeds a ``telemetry`` section: the full metrics-registry
+snapshot accumulated over the run plus the top-spans table
+(``repro.telemetry.span_summary``) when span tracing was on.
+``benchmarks/compare_bench.py`` diffs two such documents and gates
+throughput regressions against the committed baseline
+(``BENCH_8.json``):
 
-    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_7.json
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_8.json
+
+``--trace PATH`` forces ``REPRO_TELEMETRY=spans`` for the run and
+writes the Chrome-trace JSON of the span ring to PATH — load it at
+https://ui.perfetto.dev (CI uploads this as an artifact).
 
 ``--backends`` limits the *measured* backends to a comma-separated
 subset of the registered ones (the analytic sections are
@@ -55,6 +64,10 @@ def _flag_value(name):
 def main() -> None:
     quick = "--quick" in sys.argv
     json_path = _flag_value("--json")
+    trace_path = _flag_value("--trace")
+    from repro import telemetry as T
+    if trace_path:
+        T.set_mode("spans")     # the trace needs the span ring populated
     from repro import engine
     backends = _flag_value("--backends")
     backends = (engine.available_backends() if backends is None
@@ -179,6 +192,23 @@ def main() -> None:
               f"{row['shape']} {row['backend']}/{row['fuse']}"
               f"/{row['tap_opt']} steps={row['num_steps']}"
               f" launches={row['pallas_calls']}{macs}{tiling}{pyrw}{fb}")
+
+    print("=" * 72)
+    # telemetry accumulated over the whole run: registry snapshot always,
+    # top-spans table when span tracing was on (--trace / REPRO_TELEMETRY)
+    top_spans = T.span_summary(top=15)
+    doc["telemetry"] = {"mode": T.mode(), "metrics": T.snapshot(),
+                        "top_spans": top_spans}
+    if top_spans:
+        print("# top spans (by total time):")
+        print("# name,count,total_s,mean_s,max_s")
+        for r in top_spans:
+            print(f"#   {r['name']},{r['count']},{r['total_s']:.4f},"
+                  f"{r['mean_s']:.6f},{r['max_s']:.6f}")
+    if trace_path:
+        T.write_chrome_trace(trace_path)
+        print(f"# wrote Perfetto/Chrome trace to {trace_path} "
+              f"(load at https://ui.perfetto.dev)")
 
     print("=" * 72)
     doc["elapsed_s"] = time.time() - t0

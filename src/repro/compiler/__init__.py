@@ -65,11 +65,18 @@ def compile_scheme_programs(wavelet: str, scheme: str, optimize: bool,
     ``fuse="none"`` yields one program per barrier step; any other fuse
     mode yields a single whole-chain program (one kernel launch).
     """
+    from repro import telemetry as T
     from repro.engine.plan import scheme_steps  # deferred: import cycle
-    steps = scheme_steps(wavelet, scheme, optimize, inverse)
-    if fuse == "none":
-        return tuple(compile_steps((st,), opt) for st in steps)
-    return (compile_steps(steps, opt),)
+    T.counter("repro_tap_compiles_total",
+              "tap-program compilations (lru_cache misses of "
+              "compile_scheme_programs)",
+              labelnames=("scheme", "opt")).inc(scheme=scheme, opt=opt)
+    with T.span("compile.scheme", scheme=scheme, opt=opt, fuse=fuse,
+                inverse=inverse):
+        steps = scheme_steps(wavelet, scheme, optimize, inverse)
+        if fuse == "none":
+            return tuple(compile_steps((st,), opt) for st in steps)
+        return (compile_steps(steps, opt),)
 
 
 def program_stats(programs: Sequence[TapProgram]) -> dict:

@@ -15,7 +15,8 @@ of the host that produced it: ``key = "scheme|HxW|fuse|backend|fp"``.
 current device — a table tuned on a TPU must not steer block shapes on
 a GPU.  Entries for a *different* device (including the legacy
 un-fingerprinted format) fall back to the static default and are
-counted in :data:`COUNTERS` (surfaced via ``repro.engine.stats()``).
+counted in :data:`DEVICE_FALLBACKS` (surfaced via
+``repro.engine.stats()`` and the telemetry registry).
 
 The loaded table is memoized per process and re-read only when the
 ``$REPRO_BLOCK_TABLE`` path changes or :func:`clear_cache` is called
@@ -30,6 +31,8 @@ import os
 import pathlib
 from typing import Optional, Tuple
 
+from repro import telemetry as T
+
 TABLE_ENV = "REPRO_BLOCK_TABLE"
 # src/repro/engine/autotune.py -> engine -> repro -> src -> repo root
 DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] / \
@@ -38,7 +41,16 @@ DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] / \
 # device-mismatch observability: entries that exist for this config but
 # were tuned on another device (or predate fingerprinting) and were
 # therefore NOT applied
-COUNTERS = {"device_fallbacks": 0}
+DEVICE_FALLBACKS = T.counter(
+    "repro_block_table_device_fallbacks_total",
+    "block-table entries skipped because they were tuned on a different "
+    "device (or predate fingerprinting)")
+
+#: deprecated dict-style alias of the pre-telemetry module counters;
+#: will be removed one release after PR 8 (see docs/observability.md)
+COUNTERS = T.CounterAlias({
+    "device_fallbacks": ("repro_block_table_device_fallbacks_total", {}),
+})
 
 _cache: dict = {"path": None, "table": {}}
 
@@ -91,7 +103,7 @@ def lookup(scheme: str, shape: Tuple[int, int], fuse: str,
     """Best measured block for one configuration **on this device**, or
     None (use the static default).  Entries tuned on a different device
     — or written before fingerprinting — never apply; they bump
-    ``COUNTERS["device_fallbacks"]`` instead."""
+    :data:`DEVICE_FALLBACKS` instead."""
     table = load_table()
     if not table:
         return None
@@ -100,7 +112,7 @@ def lookup(scheme: str, shape: Tuple[int, int], fuse: str,
                                 device_fingerprint()))
     if entry is None:
         if base in table or any(k.startswith(base + "|") for k in table):
-            COUNTERS["device_fallbacks"] += 1
+            DEVICE_FALLBACKS.inc()
         return None
     try:
         bh, bw = int(entry[0]), int(entry[1])

@@ -52,6 +52,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 
+from repro import telemetry as T
 from repro.engine import executor as X
 
 __all__ = ["Backend", "BackendError", "register_backend", "get_backend",
@@ -143,7 +144,11 @@ class Backend:
             details = []
             ll = x
             for spec in specs:
-                ll, hl, lh, hh = self.level_forward(ll, spec, key)
+                # spans no-op while jax traces (fuse="levels"/"pyramid");
+                # eager chains get one timed span per level
+                with T.span("level.forward", level=spec.index,
+                            backend=self.name):
+                    ll, hl, lh, hh = self.level_forward(ll, spec, key)
                 details.append((hl, lh, hh))
             return ll, tuple(details[::-1])
 
@@ -162,8 +167,10 @@ class Backend:
             def run_jit(x):
                 details = []
                 ll = x
-                for fn in fns:
-                    ll, hl, lh, hh = fn(ll)
+                for lvl, fn in enumerate(fns):
+                    with T.span("level.forward", level=lvl,
+                                backend=self.name):
+                        ll, hl, lh, hh = fn(ll)
                     details.append((hl, lh, hh))
                 return ll, tuple(details[::-1])
 
@@ -176,7 +183,9 @@ class Backend:
 
         def run(ll, details):
             for spec, (hl, lh, hh) in zip(reversed(specs), details):
-                ll = self.level_inverse((ll, hl, lh, hh), spec, key)
+                with T.span("level.inverse", level=spec.index,
+                            backend=self.name):
+                    ll = self.level_inverse((ll, hl, lh, hh), spec, key)
             return ll
 
         if key.fuse == "pyramid":
@@ -188,8 +197,11 @@ class Backend:
                    for spec in specs]
 
             def run_jit(ll, details):
-                for fn, (hl, lh, hh) in zip(reversed(fns), details):
-                    ll = fn((ll, hl, lh, hh))
+                for lvl, (fn, (hl, lh, hh)) in enumerate(
+                        zip(reversed(fns), details)):
+                    with T.span("level.inverse", level=lvl,
+                                backend=self.name):
+                        ll = fn((ll, hl, lh, hh))
                 return ll
 
             return run_jit

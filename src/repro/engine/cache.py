@@ -12,7 +12,14 @@ import threading
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple
 
+from repro import telemetry as T
 from repro.engine.plan import DwtPlan, PlanKey, build_plan
+
+# process-wide cache traffic (every PlanCache instance records here;
+# instances also keep their own hit/miss ints for isolated .stats())
+CACHE_LOOKUPS = T.counter(
+    "repro_plan_cache_lookups_total",
+    "plan-cache lookups by result", labelnames=("result", "backend"))
 
 
 class PlanCache:
@@ -32,14 +39,19 @@ class PlanCache:
             if plan is not None:
                 self._plans.move_to_end(key)
                 self.hits += 1
+                CACHE_LOOKUPS.inc(result="hit", backend=key.backend)
                 return plan
         # build outside the lock: scheme algebra + jit wrapping can be slow
-        plan = builder(key)
+        with T.span("plan.cache_miss", backend=key.backend, fuse=key.fuse,
+                    scheme=key.scheme):
+            plan = builder(key)
         with self._lock:
             if key in self._plans:      # racing builder won; reuse theirs
                 self.hits += 1
+                CACHE_LOOKUPS.inc(result="hit", backend=key.backend)
                 return self._plans[key]
             self.misses += 1
+            CACHE_LOOKUPS.inc(result="miss", backend=key.backend)
             self._plans[key] = plan
             while len(self._plans) > self.maxsize:
                 self._plans.popitem(last=False)
@@ -119,6 +131,37 @@ def clear_plan_cache() -> None:
     _GLOBAL.clear()
 
 
+# zeroed section schemas: engine.stats() keeps its exact shape even
+# when a subsystem fails to import or errors at read time (a stats call
+# must never take a dashboard scrape down with it)
+_SERVE_ZERO = {
+    "submitted": 0, "served": 0, "failed": 0, "rejected": 0,
+    "redispatched": 0, "worker_deaths": 0, "workers_spawned": 0,
+    "batches": 0, "padded_images": 0, "mean_occupancy": None,
+    "latency_samples": 0, "latency_dropped": 0,
+    "p50_ms": None, "p99_ms": None, "img_per_s": None,
+}
+_AUTO_ZERO = {"predictions": 0, "store_hits": 0, "cold_fallbacks": 0,
+              "choices": {}}
+_PYRAMID_ZERO = {"pyramid_kernel_launches": 0, "vmem_fallbacks": 0}
+_TELEMETRY_ZERO = {"mode": "off", "metrics": 0, "series": 0,
+                   "dropped_series": 0,
+                   "spans": {"recorded": 0, "resident": 0, "dropped": 0,
+                             "capacity": 0}}
+
+
+def _section(zero: dict, read) -> dict:
+    """One stats() section, degrading to its zeroed schema on failure
+    (missing keys are filled in; extras from the live read survive)."""
+    try:
+        live = read()
+    except Exception:
+        return dict(zero)
+    out = dict(zero)
+    out.update(live)
+    return out
+
+
 def stats() -> dict:
     """Engine-wide observability summary: plan-cache hit/miss counters,
     fused-pyramid counters (kernel launches, VMEM-budget fallbacks),
@@ -127,27 +170,32 @@ def stats() -> dict:
     device-mismatch fallbacks, the registered-backend capability matrix,
     serving-runtime counters (p50/p99 request latency, served img/s,
     batch occupancy, backpressure/re-dispatch counts — see
-    :mod:`repro.serve`), plus one row per cached plan (steps, kernel
-    launches, compiled tap-program op counts, tile counts, pyramid
-    window geometry, the auto-resolved choice) — what benchmarks and
-    production dashboards need to see at a glance.
+    :mod:`repro.serve`), the telemetry registry/span-ring accounting
+    (:mod:`repro.telemetry`), plus one row per cached plan (steps,
+    kernel launches, compiled tap-program op counts, tile counts,
+    pyramid window geometry, the auto-resolved choice) — what
+    benchmarks and production dashboards need to see at a glance.
+
+    Every counter is a view over the central telemetry registry; the
+    ``serve`` / ``auto`` / ``pyramid`` / ``telemetry`` sections keep a
+    stable (zeroed) schema even if their subsystem fails to load.
 
     >>> from repro import engine
     >>> s = engine.stats()
     >>> sorted(s)
-    ['auto', 'backends', 'block_table', 'plan_cache', 'plans', 'pyramid', 'serve']
+    ['auto', 'backends', 'block_table', 'plan_cache', 'plans', 'pyramid', 'serve', 'telemetry']
     >>> sorted(k for k in s['serve'] if k.startswith('p'))
     ['p50_ms', 'p99_ms', 'padded_images']
     >>> [row["backend"] for row in s["backends"]]
     ['auto', 'jnp', 'pallas', 'xla']
     >>> sorted(s["auto"])
     ['choices', 'cold_fallbacks', 'predictions', 'store_hits']
+    >>> sorted(s["telemetry"])
+    ['dropped_series', 'metrics', 'mode', 'series', 'spans']
     """
     from repro.engine import autotune as AT
     from repro.engine import backends as B
     from repro.engine import plan as P
-    from repro.profiler import auto as PA
-    from repro.serve import metrics as SM
     with _GLOBAL._lock:
         items = list(_GLOBAL._plans.items())
     plans = []
@@ -183,10 +231,23 @@ def stats() -> dict:
                            "source": plan.auto.source,
                            "predicted_s": plan.auto.predicted_s}
         plans.append(row)
-    return {"plan_cache": _GLOBAL.stats(), "pyramid": dict(P.COUNTERS),
-            "auto": PA.auto_stats(),
-            "block_table": {"device_fallbacks":
-                            AT.COUNTERS["device_fallbacks"],
-                            "path": str(AT.table_path())},
+
+    def _auto():
+        from repro.profiler import auto as PA
+        return PA.auto_stats()
+
+    def _serve():
+        from repro.serve import metrics as SM
+        return SM.serve_stats()
+
+    return {"plan_cache": _GLOBAL.stats(),
+            "pyramid": _section(_PYRAMID_ZERO, lambda: dict(P.COUNTERS)),
+            "auto": _section(_AUTO_ZERO, _auto),
+            "block_table": _section(
+                {"device_fallbacks": 0, "path": ""},
+                lambda: {"device_fallbacks": AT.COUNTERS[
+                    "device_fallbacks"], "path": str(AT.table_path())}),
             "backends": list(B.capability_matrix()),
-            "serve": SM.serve_stats(), "plans": plans}
+            "serve": _section(_SERVE_ZERO, _serve),
+            "telemetry": _section(_TELEMETRY_ZERO, T.stats),
+            "plans": plans}

@@ -29,6 +29,7 @@ from repro.core import schemes as S
 from repro.kernels import polyphase as PP
 from repro.compiler import conv as CV
 from repro.compiler import execute as CX
+from repro import telemetry as T
 
 
 def apply_steps_jnp(steps: Sequence[PP.StepSpec], planes: S.Planes
@@ -145,12 +146,16 @@ def make_pyramid_forward(plan):
     """Forward executor of a fused-pyramid plan: one pallas_call for the
     whole multi-level transform (details returned coarsest-first)."""
     from repro.engine import plan as PLAN
+    levels = plan.key.levels
+    scheme = plan.key.scheme
     fn = jax.jit(functools.partial(PP.pyramid_forward_pallas,
                                    **_pyramid_kernel_kwargs(plan, False)))
 
     def run(x):
-        PLAN.COUNTERS["pyramid_kernel_launches"] += 1
-        ll, details = fn(x)
+        PLAN.PYRAMID_LAUNCHES.inc()
+        with T.span("pyramid.launch", op="forward", levels=levels,
+                    scheme=scheme):
+            ll, details = fn(x)
         return ll, tuple(details[::-1])
 
     return run
@@ -159,11 +164,15 @@ def make_pyramid_forward(plan):
 def make_pyramid_inverse(plan):
     """Inverse executor of a fused-pyramid plan (single pallas_call)."""
     from repro.engine import plan as PLAN
+    levels = plan.key.levels
+    scheme = plan.key.scheme
     fn = jax.jit(functools.partial(PP.pyramid_inverse_pallas,
                                    **_pyramid_kernel_kwargs(plan, True)))
 
     def run(ll, details):
-        PLAN.COUNTERS["pyramid_kernel_launches"] += 1
-        return fn(ll, tuple(details[::-1]))
+        PLAN.PYRAMID_LAUNCHES.inc()
+        with T.span("pyramid.launch", op="inverse", levels=levels,
+                    scheme=scheme):
+            return fn(ll, tuple(details[::-1]))
 
     return run

@@ -52,6 +52,7 @@ from repro.core import optimize as O
 from repro.core import schemes as S
 from repro.kernels import polyphase as PP
 from repro import compiler as C
+from repro import telemetry as T
 from repro.engine import autotune
 from repro.engine import backends as B
 
@@ -62,9 +63,28 @@ COMPUTE_DTYPES = ("float32", "bfloat16")
 PYRAMID_VMEM_LIMIT_ENV = "REPRO_PYRAMID_VMEM_LIMIT"
 DEFAULT_PYRAMID_VMEM_LIMIT = 12 * 2 ** 20  # of the ~16 MiB/core on TPU
 
-# engine-wide observability: fused-pyramid launches and VMEM-guard
-# fallbacks (surfaced through repro.engine.stats())
-COUNTERS = {"pyramid_kernel_launches": 0, "vmem_fallbacks": 0}
+# engine-wide observability, on the central telemetry registry
+# (surfaced through repro.engine.stats() and the Prometheus exposition)
+PYRAMID_LAUNCHES = T.counter(
+    "repro_pyramid_kernel_launches_total",
+    "fused-pyramid megakernel launches (single-pallas_call executions)")
+VMEM_FALLBACKS = T.counter(
+    "repro_vmem_fallbacks_total",
+    "fuse='pyramid' plans demoted to fuse='levels' by the VMEM guard")
+PLAN_BUILDS = T.counter(
+    "repro_plan_builds_total", "DwtPlan builds (plan-cache misses + "
+    "direct build_plan calls)", labelnames=("backend", "fuse", "scheme"))
+EXECUTIONS = T.counter(
+    "repro_plan_executions_total", "plan executions",
+    labelnames=("op", "backend", "fuse", "scheme"))
+
+#: deprecated dict-style alias of the pre-telemetry module counters
+#: (``COUNTERS["pyramid_kernel_launches"]`` etc.); will be removed one
+#: release after PR 8 — read the registry instead (docs/observability.md)
+COUNTERS = T.CounterAlias({
+    "pyramid_kernel_launches": ("repro_pyramid_kernel_launches_total", {}),
+    "vmem_fallbacks": ("repro_vmem_fallbacks_total", {}),
+})
 
 
 def pyramid_vmem_limit() -> int:
@@ -230,7 +250,14 @@ class DwtPlan:
         if tuple(x.shape) != self.key.shape:
             raise ValueError(
                 f"plan built for shape {self.key.shape}, got {x.shape}")
-        ll, details = self._forward(x)
+        k = self.key
+        EXECUTIONS.inc(op="forward", backend=k.backend, fuse=k.fuse,
+                       scheme=k.scheme)
+        with T.span("execute.forward", backend=k.backend, fuse=k.fuse,
+                    scheme=k.scheme, levels=k.levels) as sp:
+            ll, details = self._forward(x)
+        if sp.duration is not None:
+            T.record_execution(self, sp.duration, op="forward")
         return Pyramid(ll=ll, details=list(details))
 
     def execute_inverse(self, pyr: Pyramid) -> jax.Array:
@@ -239,7 +266,16 @@ class DwtPlan:
             raise ValueError(
                 f"plan built for {self.key.levels} levels, "
                 f"pyramid has {pyr.levels}")
-        return self._inverse(pyr.ll, tuple(tuple(d) for d in pyr.details))
+        k = self.key
+        EXECUTIONS.inc(op="inverse", backend=k.backend, fuse=k.fuse,
+                       scheme=k.scheme)
+        with T.span("execute.inverse", backend=k.backend, fuse=k.fuse,
+                    scheme=k.scheme, levels=k.levels) as sp:
+            out = self._inverse(pyr.ll,
+                                tuple(tuple(d) for d in pyr.details))
+        if sp.duration is not None:
+            T.record_execution(self, sp.duration, op="inverse")
+        return out
 
 
 def _resolve_level(index: int, h: int, w: int, key: PlanKey,
@@ -297,7 +333,7 @@ def _resolve_pyramid(key: PlanKey, h: int, w: int,
     window (double-buffered scratch + compute intermediates) fits the
     configurable limit; only when even the smallest phase-alignable
     block is over budget does the plan fall back to ``fuse="levels"``
-    execution (counted in :data:`COUNTERS`)."""
+    execution (counted in :data:`VMEM_FALLBACKS`)."""
     L = key.levels
     fwd_steps = scheme_steps(key.wavelet, key.scheme, key.optimize, False)
     inv_steps = scheme_steps(key.wavelet, key.scheme, False, True)
@@ -339,7 +375,7 @@ def _resolve_pyramid(key: PlanKey, h: int, w: int,
         if smaller == target:
             break
         target = smaller
-    COUNTERS["vmem_fallbacks"] += 1
+    VMEM_FALLBACKS.inc()
     return None, (f"pyramid window {spec.window_shape} needs "
                   f"~{spec.vmem_bytes} B VMEM > limit {limit} B even at "
                   f"the minimum block; executing as fuse='levels'")
@@ -366,6 +402,14 @@ def build_plan(key: PlanKey,
     build of that configuration — carries the chosen backend in its key
     plus the :class:`~repro.profiler.auto.AutoChoice` on ``plan.auto``.
     """
+    with T.span("plan.build", backend=key.backend, fuse=key.fuse,
+                scheme=key.scheme, levels=key.levels):
+        return _build_plan(key, block_target)
+
+
+def _build_plan(key: PlanKey,
+                block_target: Optional[Tuple[int, int]] = None) -> DwtPlan:
+    PLAN_BUILDS.inc(backend=key.backend, fuse=key.fuse, scheme=key.scheme)
     backend = B.get_backend(key.backend)
     if key.fuse not in FUSE_MODES:
         raise ValueError(f"unknown fuse mode {key.fuse!r}; "

@@ -17,32 +17,52 @@ concrete ``(backend, fuse, block_target, tap_opt)`` by, in order:
    platform rule: TPU -> pallas (fuse="pyramid" for multi-level, else
    "levels"), GPU -> xla/"levels", anything else -> jnp/"levels".
 
-Every resolution is counted (:data:`AUTO_COUNTERS`) and the chosen
-configs histogrammed — surfaced through ``repro.engine.stats()["auto"]``
-and printed by ``benchmarks/run.py``.
+Every resolution is counted on the telemetry registry
+(:data:`RESOLUTIONS`, labeled by source) and the chosen configs
+histogrammed (:data:`CHOICES`) — surfaced through
+``repro.engine.stats()["auto"]`` and printed by ``benchmarks/run.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro import telemetry as T
 from repro.profiler import model as M
 from repro.profiler import store as ST
 
-AUTO_COUNTERS = {"predictions": 0, "store_hits": 0, "cold_fallbacks": 0}
-_CHOICES: dict = {}
+RESOLUTIONS = T.counter(
+    "repro_auto_resolutions_total",
+    'backend="auto" resolutions by source (store hit / model prediction '
+    "/ cold-start heuristic)", labelnames=("source",))
+CHOICES = T.counter(
+    "repro_auto_choices_total",
+    'concrete configurations backend="auto" resolved to',
+    labelnames=("backend", "fuse"))
+
+#: deprecated dict-style alias of the pre-telemetry counters (legacy
+#: key -> labeled registry series); removed one release after PR 8
+AUTO_COUNTERS = T.CounterAlias({
+    "predictions": ("repro_auto_resolutions_total", {"source": "model"}),
+    "store_hits": ("repro_auto_resolutions_total", {"source": "store"}),
+    "cold_fallbacks": ("repro_auto_resolutions_total",
+                       {"source": "heuristic"}),
+})
 
 
 def reset_counters() -> None:
-    AUTO_COUNTERS.update(predictions=0, store_hits=0, cold_fallbacks=0)
-    _CHOICES.clear()
+    RESOLUTIONS.reset()
+    CHOICES.reset()
 
 
 def auto_stats() -> dict:
     """Counters consumed by ``engine.stats()`` / ``benchmarks/run.py``:
     resolutions served by model predictions, by exact store hits, by the
     cold-start heuristic, and the chosen-config histogram."""
-    return {**AUTO_COUNTERS, "choices": dict(sorted(_CHOICES.items()))}
+    choices = {f'{s["labels"]["backend"]}|{s["labels"]["fuse"]}':
+               int(s["value"]) for s in CHOICES.series()}
+    return {**dict(AUTO_COUNTERS.items()),
+            "choices": dict(sorted(choices.items()))}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,20 +163,16 @@ def choose(key, store: Optional[ST.TraceStore] = None,
             best = row
 
     if best is None:
-        AUTO_COUNTERS["cold_fallbacks"] += 1
+        RESOLUTIONS.inc(source="heuristic")
         choice = _heuristic(key)
     else:
         t, backend, fuse, tap_opt, block, source = best
-        if source == "store":
-            AUTO_COUNTERS["store_hits"] += 1
-        else:
-            AUTO_COUNTERS["predictions"] += 1
+        RESOLUTIONS.inc(source=source)
         if block_target is not None:
             block = None
         if block is None:
             block = AT.lookup(key.scheme, key.shape[-2:], fuse, backend)
         choice = AutoChoice(backend=backend, fuse=fuse, tap_opt=tap_opt,
                             block=block, source=source, predicted_s=t)
-    label = f"{choice.backend}|{choice.fuse}"
-    _CHOICES[label] = _CHOICES.get(label, 0) + 1
+    CHOICES.inc(backend=choice.backend, fuse=choice.fuse)
     return choice

@@ -51,6 +51,9 @@ def profile_plan(plan, x=None, reps: int = 3,
     """
     key = plan.key
     t = measure_plan(plan, x=x, reps=reps)
+    # honest device time (block_until_ready) -> the live roofline gauges
+    from repro import telemetry as T
+    T.record_execution(plan, t, op="profile")
     feats = M.config_features(key, block=block)
     if block is None:
         block = (plan.pyramid.target if plan.pyramid is not None

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import telemetry as T
 from repro.distributed.fault_tolerance import (FaultToleranceConfig,
                                                HeartbeatTracker)
 from repro.engine.pyramid import Pyramid
@@ -243,10 +244,12 @@ class DwtServer:
         METRICS.request_submitted()
         fut = self._loop.create_future()
         req = BK.Request(payload=payload, future=fut, t=self._loop.time())
-        try:
+        with T.span("serve.enqueue", op=key.op, scheme=key.scheme,
+                    backend=key.backend):
             self._buckets.setdefault(key, deque()).append(req)
             self._buckets_seen.add(key)
             self._arrival.set()
+        try:
             return await fut
         finally:
             self._pending -= 1
@@ -326,7 +329,9 @@ class DwtServer:
             self._arrival.clear()
 
     def _emit(self, key: BK.BucketKey, reqs: list) -> None:
-        self._batch_q.put_nowait((key, reqs))
+        with T.span("serve.bucket_flush", op=key.op, scheme=key.scheme,
+                    batch=len(reqs)):
+            self._batch_q.put_nowait((key, reqs))
 
     # -- workers -------------------------------------------------------
     async def _run_worker(self, name: str) -> None:
@@ -416,17 +421,27 @@ class DwtServer:
         from repro import engine as E
         n = len(reqs)
         b = BK.padded_batch(n, self.cfg.max_batch)
-        plan = E.get_plan(**key.plan_kwargs(b))
-        if key.op == "dwt2":
-            xs = BK.stack_images(reqs, b)
-            pyr = plan.execute(jnp.asarray(xs))
-            return BK.scatter_pyramid(pyr, n), b
-        host = BK.stack_pyramids(reqs, b)
-        dev = Pyramid(ll=jnp.asarray(host.ll),
-                      details=[tuple(jnp.asarray(d) for d in dd)
-                               for dd in host.details])
-        out = plan.execute_inverse(dev)
-        return BK.scatter_images(out, n), b
+        with T.span("serve.batch", op=key.op, scheme=key.scheme,
+                    real=n, padded=b):
+            plan = E.get_plan(**key.plan_kwargs(b))
+            if key.op == "dwt2":
+                with T.span("serve.stack_h2d", op=key.op, batch=b):
+                    xs = jnp.asarray(BK.stack_images(reqs, b))
+                with T.span("serve.execute", op=key.op, batch=b,
+                            backend=plan.key.backend):
+                    pyr = plan.execute(xs)
+                with T.span("serve.scatter", op=key.op, batch=b):
+                    return BK.scatter_pyramid(pyr, n), b
+            with T.span("serve.stack_h2d", op=key.op, batch=b):
+                host = BK.stack_pyramids(reqs, b)
+                dev = Pyramid(ll=jnp.asarray(host.ll),
+                              details=[tuple(jnp.asarray(d) for d in dd)
+                                       for dd in host.details])
+            with T.span("serve.execute", op=key.op, batch=b,
+                        backend=plan.key.backend):
+                out = plan.execute_inverse(dev)
+            with T.span("serve.scatter", op=key.op, batch=b):
+                return BK.scatter_images(out, n), b
 
     # -- observability -------------------------------------------------
     def stats(self) -> dict:

@@ -1,0 +1,226 @@
+"""Structured span tracer: nested timed spans over the whole pipeline.
+
+``span("plan.build", scheme="cdf97")`` is a context manager producing
+one timed :class:`SpanRecord` — wall-clock start/duration, a span id, a
+parent id (spans nest through a :mod:`contextvars` variable, so nesting
+is correct across threads *and* asyncio tasks — the serve scheduler's
+event loop and its worker threads each get their own span stack), the
+label set, and the recording thread.  Records land in a bounded
+in-memory ring (:class:`SpanTracer`; ``$REPRO_TELEMETRY_RING`` entries,
+default 4096 — a long-lived server never grows without limit, evictions
+are counted) and export as Chrome-trace-event JSON loadable in Perfetto
+(:func:`repro.telemetry.export.chrome_trace`).
+
+Overhead discipline:
+
+* spans only record under ``REPRO_TELEMETRY=spans``; otherwise
+  :func:`span` returns one shared no-op context manager — the cost of
+  an instrument site is a branch and a constant return;
+* a span opened while JAX is *tracing* (inside ``jax.jit``) is also a
+  no-op: a trace-time measurement would record compile-time Python
+  execution once and then silently never fire again — worse than no
+  data.  Instrument sites therefore do not need to care whether they
+  run under ``jit``;
+* with ``$REPRO_TELEMETRY_JAX=1`` every real span also enters a
+  ``jax.profiler.TraceAnnotation`` so the same names show up inside
+  XLA/TensorBoard device profiles.
+"""
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+import itertools
+import os
+import threading
+import time
+from collections import deque
+from typing import List, Optional
+
+from repro.telemetry.config import CONFIG
+
+RING_ENV = "REPRO_TELEMETRY_RING"
+DEFAULT_RING = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanRecord:
+    """One completed span (what the ring stores and exports)."""
+
+    name: str
+    start_s: float          # perf_counter timestamp at __enter__
+    dur_s: float            # wall-clock duration
+    span_id: int
+    parent_id: Optional[int]
+    labels: dict
+    thread: str             # recording thread name (trace "tid" lane)
+
+
+class SpanTracer:
+    """Bounded ring of completed spans + the id allocator."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is None:
+            try:
+                capacity = int(os.environ.get(RING_ENV, DEFAULT_RING))
+            except ValueError:
+                capacity = DEFAULT_RING
+        self.capacity = max(1, capacity)
+        self._ring: "deque[SpanRecord]" = deque(maxlen=self.capacity)
+        self._lock = threading.Lock()
+        self._ids = itertools.count(1)
+        self.dropped = 0
+        self.recorded = 0
+
+    def next_id(self) -> int:
+        return next(self._ids)
+
+    def add(self, rec: SpanRecord) -> None:
+        with self._lock:
+            if len(self._ring) == self.capacity:
+                self.dropped += 1
+            self._ring.append(rec)
+            self.recorded += 1
+
+    def records(self) -> List[SpanRecord]:
+        """Oldest-first copy of the ring."""
+        with self._lock:
+            return list(self._ring)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+            self.dropped = 0
+            self.recorded = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"recorded": self.recorded, "resident": len(self._ring),
+                    "dropped": self.dropped, "capacity": self.capacity}
+
+
+#: process-global tracer (one trace per process; tests clear() between
+#: cases via repro.telemetry.reset())
+TRACER = SpanTracer()
+
+# the active span of the current thread/task: contextvars give each
+# thread AND each asyncio task its own value, so serve-event-loop spans
+# and worker-thread spans parent independently
+_CURRENT: "contextvars.ContextVar[Optional[_ActiveSpan]]" = \
+    contextvars.ContextVar("repro_telemetry_span", default=None)
+
+
+def _jax_tracing() -> bool:
+    """True while JAX is tracing (inside jit/scan/...): spans there
+    would time compilation, not execution."""
+    try:
+        from jax import core as _jc
+        return not _jc.trace_state_clean()
+    except Exception:
+        return False
+
+
+class _NoopSpan:
+    """Shared do-nothing span (mode off/counters, or under tracing)."""
+
+    __slots__ = ()
+    duration: Optional[float] = None
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+NOOP_SPAN = _NoopSpan()
+
+
+class _ActiveSpan:
+    """A live span: times itself, parents through the context var, and
+    appends its :class:`SpanRecord` to the tracer on exit.  Exposes
+    ``duration`` (seconds) after exit so callers can feed attribution
+    (:mod:`repro.telemetry.attribution`) without re-timing."""
+
+    __slots__ = ("name", "labels", "span_id", "parent_id", "start_s",
+                 "duration", "_token", "_jax_ctx", "_tracer")
+
+    def __init__(self, name: str, labels: dict,
+                 tracer: SpanTracer = TRACER):
+        self.name = name
+        self.labels = labels
+        self._tracer = tracer
+        self.span_id = tracer.next_id()
+        self.parent_id: Optional[int] = None
+        self.start_s = 0.0
+        self.duration: Optional[float] = None
+        self._token = None
+        self._jax_ctx = None
+
+    def __enter__(self) -> "_ActiveSpan":
+        parent = _CURRENT.get()
+        self.parent_id = parent.span_id if parent is not None else None
+        self._token = _CURRENT.set(self)
+        if CONFIG.jax_annotations:
+            try:
+                import jax
+                self._jax_ctx = jax.profiler.TraceAnnotation(self.name)
+                self._jax_ctx.__enter__()
+            except Exception:
+                self._jax_ctx = None
+        self.start_s = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.duration = time.perf_counter() - self.start_s
+        if self._jax_ctx is not None:
+            try:
+                self._jax_ctx.__exit__(*exc)
+            except Exception:
+                pass
+        _CURRENT.reset(self._token)
+        self._tracer.add(SpanRecord(
+            name=self.name, start_s=self.start_s, dur_s=self.duration,
+            span_id=self.span_id, parent_id=self.parent_id,
+            labels=self.labels, thread=threading.current_thread().name))
+        return False
+
+
+def span(name: str, **labels):
+    """Open one timed span (a context manager).
+
+    No-op unless ``REPRO_TELEMETRY=spans`` and JAX is not currently
+    tracing; labels become the span's Perfetto ``args`` and the
+    grouping keys of :func:`span_summary`.
+
+        with span("serve.execute", backend="jnp", batch=16):
+            plan.execute(batch)
+    """
+    if not CONFIG.spans_on:
+        return NOOP_SPAN
+    if _jax_tracing():
+        return NOOP_SPAN
+    return _ActiveSpan(name, labels)
+
+
+def current_span() -> Optional[_ActiveSpan]:
+    """The innermost open span of this thread/task, or None."""
+    return _CURRENT.get()
+
+
+def span_summary(tracer: Optional[SpanTracer] = None,
+                 top: Optional[int] = None) -> List[dict]:
+    """Aggregate the ring by span name: count, total/mean/max seconds,
+    sorted by total time descending (the "top spans" table of
+    ``benchmarks/run.py --json``)."""
+    recs = (tracer or TRACER).records()
+    agg: dict = {}
+    for r in recs:
+        row = agg.setdefault(r.name, {"name": r.name, "count": 0,
+                                      "total_s": 0.0, "max_s": 0.0})
+        row["count"] += 1
+        row["total_s"] += r.dur_s
+        row["max_s"] = max(row["max_s"], r.dur_s)
+    rows = sorted(agg.values(), key=lambda r: -r["total_s"])
+    for r in rows:
+        r["mean_s"] = r["total_s"] / r["count"]
+    return rows[:top] if top is not None else rows

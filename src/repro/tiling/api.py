@@ -32,6 +32,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as T
 from repro.engine.pyramid import Pyramid
 from repro.tiling import exchange as EX
 
@@ -55,12 +56,19 @@ def make_tiled_forward(plan):
     wplan = _window_plan(key, batch + (grid.count,) + grid.window_shape)
 
     def run(x):
-        wins = EX.gather_windows(x, grid)
-        wll, wdetails = wplan._forward(wins)
-        ll = EX.stitch_plane(wll, grid, levels - 1)
-        details = tuple(
-            tuple(EX.stitch_plane(d, grid, levels - 1 - k) for d in det)
-            for k, det in enumerate(wdetails))
+        # spans no-op inside jit tracing (fuse="levels"); on the eager
+        # paths they time gather / transform / stitch separately
+        with T.span("tile.halo_gather", op="forward", tiles=grid.count):
+            wins = EX.gather_windows(x, grid)
+        with T.span("tile.window_transform", op="forward",
+                    tiles=grid.count, backend=key.backend):
+            wll, wdetails = wplan._forward(wins)
+        with T.span("tile.stitch", op="forward", tiles=grid.count):
+            ll = EX.stitch_plane(wll, grid, levels - 1)
+            details = tuple(
+                tuple(EX.stitch_plane(d, grid, levels - 1 - k)
+                      for d in det)
+                for k, det in enumerate(wdetails))
         return ll, details
 
     return jax.jit(run) if key.fuse == "levels" else run
@@ -75,13 +83,17 @@ def make_tiled_inverse(plan):
     wplan = _window_plan(key, batch + (grid.count,) + grid.inv_window_shape)
 
     def run(ll, details):
-        wll = EX.gather_plane_windows(ll, grid, levels - 1)
-        wdet = tuple(
-            tuple(EX.gather_plane_windows(d, grid, levels - 1 - k)
-                  for d in det)
-            for k, det in enumerate(details))
-        xw = wplan._inverse(wll, wdet)
-        return EX.stitch_plane(xw, grid, 0, inverse=True)
+        with T.span("tile.halo_gather", op="inverse", tiles=grid.count):
+            wll = EX.gather_plane_windows(ll, grid, levels - 1)
+            wdet = tuple(
+                tuple(EX.gather_plane_windows(d, grid, levels - 1 - k)
+                      for d in det)
+                for k, det in enumerate(details))
+        with T.span("tile.window_transform", op="inverse",
+                    tiles=grid.count, backend=key.backend):
+            xw = wplan._inverse(wll, wdet)
+        with T.span("tile.stitch", op="inverse", tiles=grid.count):
+            return EX.stitch_plane(xw, grid, 0, inverse=True)
 
     return jax.jit(run) if key.fuse == "levels" else run
 

@@ -32,6 +32,7 @@ from typing import Tuple
 import jax
 import numpy as np
 
+from repro import telemetry as T
 from repro.engine.pyramid import Pyramid
 from repro.tiling import exchange as EX
 
@@ -132,13 +133,23 @@ def stream_dwt2(image, *, wavelet: str = "cdf97", levels: int = 1,
             for dst, cores in zip(det_out[k], det):
                 write_rows(dst, cores, i, levels - 1 - k)
 
+    # under REPRO_TELEMETRY=spans the three pipeline stages time
+    # separately: host I/O (gather), h2d + async dispatch, and the
+    # blocking drain (device compute the overlap did not hide)
     pending = deque()
-    for i in range(nr):
-        wins = _host_band(image, ri[i], ci)
-        outs = band(jax.device_put(wins))   # async: overlaps older bands
-        pending.append((i, outs))
-        while len(pending) > max_inflight:
-            drain(pending.popleft())
-    while pending:
-        drain(pending.popleft())
+    with T.span("stream.dwt2", bands=nr, levels=levels, backend=backend):
+        for i in range(nr):
+            with T.span("stream.host_gather", band=i):
+                wins = _host_band(image, ri[i], ci)
+            with T.span("stream.h2d_dispatch", band=i):
+                outs = band(jax.device_put(wins))  # async: overlaps bands
+            pending.append((i, outs))
+            while len(pending) > max_inflight:
+                item = pending.popleft()
+                with T.span("stream.drain", band=item[0]):
+                    drain(item)
+        while pending:
+            item = pending.popleft()
+            with T.span("stream.drain", band=item[0]):
+                drain(item)
     return Pyramid(ll=ll_out, details=det_out)
