@@ -1,0 +1,354 @@
+"""Chaos soak: seeded fault injection over engine, serve and stream.
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench [--quick] \
+        [--seed 1234] [--json PATH]
+
+Drives real traffic through every resilience layer (docs/resilience.md)
+with a *deterministic* seeded fault schedule (``repro.faults``) and
+gates the contract of PR 9:
+
+* **zero wrong answers** — every transform that completes under faults
+  is bit-identical to its fault-free reference on the deterministic
+  jnp path (retry/recovery must recompute, never patch); the degraded
+  pallas->weaker-config leg matches to the documented fp tolerance;
+* **zero hangs** — every serving future resolves; nothing outlives its
+  deadline plus scheduling slack;
+* **typed failures only** — anything that does fail (seeded raise
+  faults, deadline kills) fails with the resilience taxonomy's typed
+  errors, never a bare worker hang or silent drop;
+* **bounded p99 inflation** — the faulted serve soak's p99 stays within
+  a generous envelope of the clean run (catches systemic stalls, not
+  microbenchmark noise);
+* **faults are visible** — every injection and fallback shows up in the
+  telemetry counters (``repro_fault_injections_total{site,kind}``,
+  ``repro_fallbacks_total{from,to,site}``).
+
+The schedule is a pure function of ``--seed``: the same seed injects
+the same faults at the same draws, so CI pins one seed and the soak is
+reproducible, not flaky.  ``--quick`` shrinks the traffic for the CI
+``chaos-smoke`` job.
+"""
+import asyncio
+import json
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+DEFAULT_SEED = 1234
+#: p99 envelope: faulted p99 <= clean p99 * MULT + SLACK_MS (the gate
+#: exists to catch stalls measured in seconds, not scheduler jitter)
+P99_MULT = 25.0
+P99_SLACK_MS = 250.0
+#: every serve future must resolve within deadline + this slack
+HANG_SLACK_S = 10.0
+
+CONFIG = dict(wavelet="cdf97", scheme="ns-polyconv", levels=2,
+              backend="jnp", fuse="none")
+
+
+def _fault_env(quick: bool):
+    """The soak's seeded fault schedule, per leg."""
+    return {
+        # engine soak: transient raise faults + NaN corruption on the
+        # dispatch sites; retries must absorb all of them
+        "engine": ("execute.forward=0.2,execute.inverse=corrupt:0.15,"
+                   "tiling.halo_gather=0.15"),
+        # serve soak: slow faults inflate latency, sparse raise faults
+        # fail whole batches (typed), engine faults retry inside
+        "serve": ("serve.batch=slow:0.1:0.003,serve.stack_h2d=0.03,"
+                  "execute.forward=0.1"),
+        # degrade leg: the pyramid megakernel always fails to launch
+        "degrade": "pyramid.launch=always",
+        # stream leg: h2d dispatch dies mid-run (kill), then resume
+        "stream_kill": "stream.h2d_dispatch=0.5",
+        "stream_retry": "stream.host_gather=0.2,stream.drain=0.2",
+    }
+
+
+def _arm(text: str, seed: int):
+    from repro.faults import inject as FJ
+    from repro.faults import plan as FP
+    return FJ.activate(FP.FaultPlan.from_text(text, seed=seed))
+
+
+def _disarm(prev) -> None:
+    from repro.faults import inject as FJ
+    FJ.activate(prev)
+
+
+# ---------------------------------------------------------------------------
+# legs
+# ---------------------------------------------------------------------------
+
+def engine_soak(n: int, seed: int, schedule: str) -> dict:
+    """dwt2/idwt2 round-trips (monolithic + tiled) under transient
+    faults; every answer must be bit-identical to the fault-free run."""
+    from repro.core import dwt2, idwt2
+    from repro.faults import degrade as D
+    rng = np.random.default_rng(seed)
+    imgs = [rng.standard_normal((64, 64)).astype(np.float32)
+            for _ in range(n)]
+    kw = [dict(CONFIG) if i % 3 else dict(CONFIG, tiles=(32, 32))
+          for i in range(n)]
+
+    refs = [(np.asarray(dwt2(im, **k).ll),
+             np.asarray(idwt2(dwt2(im, **k),
+                              **{a: b for a, b in k.items()
+                                 if a != "levels"})))
+            for im, k in zip(imgs, kw)]
+
+    # corrupt faults on the jnp reference path have no weaker config to
+    # fall back to — give the retry loop enough redraws to ride them out
+    import dataclasses
+
+    from repro.faults import degrade as DG
+    saved_cfg = DG.CONFIG
+    DG.CONFIG = dataclasses.replace(saved_cfg, retries=4)
+
+    wrong = failures = 0
+    prev = _arm(schedule, seed)
+    try:
+        for im, k, (rll, rx) in zip(imgs, kw, refs):
+            try:
+                pyr = dwt2(im, **k)
+                x = idwt2(pyr, **{a: b for a, b in k.items()
+                                  if a != "levels"})
+            except Exception:
+                failures += 1
+                continue
+            if not (np.array_equal(np.asarray(pyr.ll), rll)
+                    and np.array_equal(np.asarray(x), rx)):
+                wrong += 1
+    finally:
+        _disarm(prev)
+        DG.CONFIG = saved_cfg
+    return {"n": n, "wrong": wrong, "failures": failures,
+            "resilience": D.stats()}
+
+
+def degrade_leg(seed: int, schedule: str) -> dict:
+    """pallas/pyramid always fails to launch: the degradation chain must
+    land on a working config whose output matches the jnp reference to
+    fp tolerance, and the hop must be recorded."""
+    from repro.core import dwt2
+    from repro.faults.degrade import FALLBACKS
+    rng = np.random.default_rng(seed + 1)
+    im = rng.standard_normal((64, 64)).astype(np.float32)
+    ref = np.asarray(dwt2(im, wavelet="cdf97", levels=2,
+                          scheme="ns-polyconv", backend="jnp",
+                          fuse="none").ll)
+    before = sum(s["value"] for s in FALLBACKS.series())
+    prev = _arm(schedule, seed)
+    try:
+        pyr = dwt2(im, wavelet="cdf97", levels=2, scheme="ns-polyconv",
+                   backend="pallas", fuse="pyramid")
+    finally:
+        _disarm(prev)
+    hops = sum(s["value"] for s in FALLBACKS.series()) - before
+    close = bool(np.allclose(np.asarray(pyr.ll), ref,
+                             rtol=1e-3, atol=1e-4))
+    return {"fallback_hops": int(hops), "tolerance_ok": close,
+            "fallback_series": FALLBACKS.series()}
+
+
+def serve_soak(n: int, seed: int, schedule: str, quick: bool) -> dict:
+    """Concurrent serving under slow/raise faults with deadlines and a
+    breaker armed; gates hangs, typed failures, parity and p99."""
+    from repro.core import dwt2
+    from repro.faults.inject import InjectedFault
+    from repro.serve import (CircuitOpenError, DeadlineExceeded, DwtServer,
+                             ServeConfig, WorkerDied, reset_metrics,
+                             serve_stats)
+    rng = np.random.default_rng(seed + 2)
+    imgs = [rng.standard_normal((32, 32)).astype(np.float32)
+            for _ in range(n)]
+    refs = [np.asarray(dwt2(im, **CONFIG).ll) for im in imgs]
+    deadline_ms = 5000.0
+    cfg = ServeConfig(max_batch=8, max_wait_ms=2.0, num_workers=2,
+                      request_deadline_ms=deadline_ms,
+                      breaker_threshold=5, breaker_cooldown_s=0.2)
+    typed = (InjectedFault, DeadlineExceeded, CircuitOpenError, WorkerDied)
+
+    async def run_pass():
+        outs = [None] * n
+        errs = [None] * n
+        async with DwtServer(cfg) as srv:
+            sem = asyncio.Semaphore(16)
+
+            async def one(i):
+                async with sem:
+                    try:
+                        outs[i] = await srv.submit(imgs[i], **CONFIG)
+                    except Exception as e:      # gate classifies below
+                        errs[i] = e
+            t0 = time.perf_counter()
+            await asyncio.wait_for(
+                asyncio.gather(*[one(i) for i in range(n)]),
+                timeout=deadline_ms / 1e3 + HANG_SLACK_S)
+            wall = time.perf_counter() - t0
+        return outs, errs, wall
+
+    # clean pass for the p99 baseline
+    reset_metrics()
+    outs, errs, _ = asyncio.run(run_pass())
+    clean = serve_stats()
+    assert not any(errs), f"clean serve pass failed: {errs}"
+
+    reset_metrics()
+    prev = _arm(schedule, seed)
+    try:
+        outs, errs, wall = asyncio.run(run_pass())
+    finally:
+        _disarm(prev)
+    faulted = serve_stats()
+
+    wrong = sum(1 for i, o in enumerate(outs)
+                if o is not None
+                and not np.array_equal(np.asarray(o.ll), refs[i]))
+    untyped = [repr(e) for e in errs
+               if e is not None and not isinstance(e, typed)]
+    completed = sum(1 for o in outs if o is not None)
+    p99_ok = (clean["p99_ms"] is None or faulted["p99_ms"] is None
+              or faulted["p99_ms"] <= clean["p99_ms"] * P99_MULT
+              + P99_SLACK_MS)
+    return {"n": n, "completed": completed,
+            "failed_typed": sum(1 for e in errs
+                                if isinstance(e, typed)),
+            "failed_untyped": untyped, "wrong": wrong,
+            "wall_s": wall,
+            "p99_clean_ms": clean["p99_ms"],
+            "p99_faulted_ms": faulted["p99_ms"], "p99_ok": bool(p99_ok),
+            "serve_stats": faulted}
+
+
+def stream_soak(seed: int, kill_schedule: str, retry_schedule: str) -> dict:
+    """Kill a checkpointed stream mid-run, resume it, and separately
+    ride transient faults with per-band retries — both bit-identical."""
+    import os
+    from repro.faults.inject import InjectedFault
+    from repro.tiling import stream_dwt2
+    img = np.arange(128.0 * 128, dtype=np.float32).reshape(128, 128)
+    skw = dict(levels=2, tiles=(32, 32), backend="jnp", fuse="none")
+    ref = stream_dwt2(img, **skw)
+
+    ck = os.path.join(tempfile.mkdtemp(prefix="chaos_ck_"), "ck")
+    kills = 0
+    prev = _arm(kill_schedule, seed)
+    try:
+        for _ in range(8):                       # keep killing, keep resuming
+            try:
+                pyr = stream_dwt2(img, checkpoint=ck, max_inflight=1, **skw)
+                break
+            except InjectedFault:
+                kills += 1
+        else:
+            raise AssertionError("stream never completed across 8 resumes")
+    finally:
+        _disarm(prev)
+    resume_identical = bool(
+        np.array_equal(np.asarray(pyr.ll), np.asarray(ref.ll))
+        and all(np.array_equal(np.asarray(a), np.asarray(b))
+                for da, db in zip(pyr.details, ref.details)
+                for a, b in zip(da, db)))
+
+    prev = _arm(retry_schedule, seed + 3)
+    try:
+        pyr2 = stream_dwt2(img, retries=3, **skw)
+    finally:
+        _disarm(prev)
+    retry_identical = bool(np.array_equal(np.asarray(pyr2.ll),
+                                          np.asarray(ref.ll)))
+    return {"kills_before_complete": kills,
+            "resume_bit_identical": resume_identical,
+            "retry_bit_identical": retry_identical}
+
+
+# ---------------------------------------------------------------------------
+# gates + driver
+# ---------------------------------------------------------------------------
+
+def chaos_bench(quick: bool = False, seed: int = DEFAULT_SEED) -> dict:
+    from repro import engine
+    from repro.faults.inject import INJECTIONS
+    sched = _fault_env(quick)
+    n_engine = 24 if quick else 96
+    n_serve = 64 if quick else 192
+
+    doc = {"seed": seed, "quick": quick}
+    doc["engine"] = engine_soak(n_engine, seed, sched["engine"])
+    doc["degrade"] = degrade_leg(seed, sched["degrade"])
+    doc["serve"] = serve_soak(n_serve, seed, sched["serve"], quick)
+    doc["stream"] = stream_soak(seed, sched["stream_kill"],
+                                sched["stream_retry"])
+
+    inj = INJECTIONS.series()
+    doc["injections"] = {"total": int(sum(s["value"] for s in inj)),
+                         "sites": sorted({s["labels"]["site"]
+                                          for s in inj}),
+                         "series": inj}
+    doc["faults_stats"] = engine.stats()["faults"]
+
+    gates = {
+        "engine_zero_wrong": doc["engine"]["wrong"] == 0,
+        "engine_zero_failures": doc["engine"]["failures"] == 0,
+        "degrade_recorded": doc["degrade"]["fallback_hops"] >= 1,
+        "degrade_tolerance": doc["degrade"]["tolerance_ok"],
+        "serve_zero_wrong": doc["serve"]["wrong"] == 0,
+        "serve_typed_failures_only": not doc["serve"]["failed_untyped"],
+        "serve_p99_bounded": doc["serve"]["p99_ok"],
+        "stream_resume_identical": doc["stream"]["resume_bit_identical"],
+        "stream_retry_identical": doc["stream"]["retry_bit_identical"],
+        "injections_visible": doc["injections"]["total"] > 0
+        and len(doc["injections"]["sites"]) >= 3,
+    }
+    doc["gates"] = gates
+    doc["ok"] = all(gates.values())
+    return doc
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    seed = DEFAULT_SEED
+    if "--seed" in sys.argv:
+        seed = int(sys.argv[sys.argv.index("--seed") + 1])
+    json_path = None
+    if "--json" in sys.argv:
+        json_path = sys.argv[sys.argv.index("--json") + 1]
+
+    doc = chaos_bench(quick=quick, seed=seed)
+
+    e, s, st, d = doc["engine"], doc["serve"], doc["stream"], doc["degrade"]
+    print(f"# chaos soak (seed {doc['seed']}, "
+          f"{'quick' if doc['quick'] else 'full'})")
+    print(f"#   engine: {e['n']} round-trips, wrong={e['wrong']}, "
+          f"failures={e['failures']}, "
+          f"retries={e['resilience']['retries']}, "
+          f"fallbacks={e['resilience']['fallbacks']}")
+    print(f"#   degrade: {d['fallback_hops']} hop(s), "
+          f"tolerance={'OK' if d['tolerance_ok'] else 'FAIL'}")
+    print(f"#   serve: {s['completed']}/{s['n']} completed, "
+          f"{s['failed_typed']} typed failures, wrong={s['wrong']}, "
+          f"p99 {s['p99_clean_ms'] and round(s['p99_clean_ms'], 2)} -> "
+          f"{s['p99_faulted_ms'] and round(s['p99_faulted_ms'], 2)} ms")
+    print(f"#   stream: {st['kills_before_complete']} kill(s) then "
+          f"resume={'OK' if st['resume_bit_identical'] else 'FAIL'}, "
+          f"retry={'OK' if st['retry_bit_identical'] else 'FAIL'}")
+    print(f"#   injections: {doc['injections']['total']} across sites "
+          f"{doc['injections']['sites']}")
+    for name, ok in doc["gates"].items():
+        print(f"#   gate {name}: {'OK' if ok else 'FAIL'}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+        print(f"# wrote chaos soak results to {json_path}")
+    if not doc["ok"]:
+        raise SystemExit("chaos soak gate failure: " + ", ".join(
+            k for k, v in doc["gates"].items() if not v))
+    print("# OK: all chaos gates passed")
+
+
+if __name__ == "__main__":
+    main()

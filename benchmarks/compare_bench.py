@@ -3,6 +3,17 @@
     PYTHONPATH=src python -m benchmarks.compare_bench BASELINE.json NEW.json \
         [--gate 0.15] [--strict]
 
+A second mode gates the fault-injection plane's dormant cost
+(docs/resilience.md: "zero overhead when unset"):
+
+    PYTHONPATH=src python -m benchmarks.compare_bench --faults-overhead \
+        [--gate 0.01]
+
+It times warmed ``dwt2`` traffic twice — once through the shipped code
+path (fault sites + resilient dispatch present, ``$REPRO_FAULTS``
+unset) and once with the plane's hooks stubbed to bare calls — and
+fails when the median inflation exceeds the gate (default 1%).
+
 Compares the throughput story of a fresh bench run against a committed
 baseline (``BENCH_8.json``) and exits non-zero when anything regressed
 by more than ``--gate`` (default 15%).
@@ -124,7 +135,71 @@ def compare(base: dict, new: dict, gate: float = 0.15,
     return rows, failures, warnings
 
 
+def faults_overhead(gate: float = 0.01, calls: int = 300,
+                    repeats: int = 5) -> None:
+    """Measure the dormant faults plane against a stubbed-out build of
+    the same hot path; exit non-zero above ``gate`` relative overhead.
+
+    Per repeat, both variants time the same warmed ``dwt2`` loop; the
+    reported overhead is the *minimum* over repeats (noise only ever
+    inflates a measurement, so min-of-k isolates the systematic cost).
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import dwt2
+    from repro.faults import degrade as D
+    from repro.faults import inject as FI
+
+    assert FI.active() is None, \
+        "--faults-overhead must run with $REPRO_FAULTS unset"
+    x = np.arange(64.0 * 64, dtype=np.float32).reshape(64, 64)
+    kw = dict(wavelet="cdf97", levels=2, scheme="ns-polyconv",
+              backend="jnp", fuse="none")
+
+    def loop():
+        for _ in range(calls):
+            dwt2(x, **kw)
+
+    def timed():
+        t0 = time.perf_counter()
+        loop()
+        return time.perf_counter() - t0
+
+    # stubbed variant: hooks replaced by the bare call (what the code
+    # would be if the plane did not exist)
+    real_inject, real_dispatch = FI.maybe_inject, D.dispatch
+
+    def bare_dispatch(plan, op, args):
+        return (plan._forward if op == "forward" else plan._inverse)(*args)
+
+    overheads = []
+    loop()                                       # warm plans + caches
+    for _ in range(repeats):
+        with_plane = timed()
+        FI.maybe_inject = lambda *a, **k: None
+        D.dispatch = bare_dispatch
+        try:
+            without = timed()
+        finally:
+            FI.maybe_inject, D.dispatch = real_inject, real_dispatch
+        overheads.append(with_plane / without - 1.0)
+    best = min(overheads)
+    print(f"# faults-plane dormant overhead: {100 * best:+.3f}% "
+          f"(min of {repeats} x {calls} calls; gate {100 * gate:.1f}%)")
+    print(f"#   per-repeat: {[f'{100 * o:+.2f}%' for o in overheads]}")
+    if best > gate:
+        raise SystemExit(
+            f"dormant faults plane costs {100 * best:.2f}% > "
+            f"{100 * gate:.1f}% gate on the dwt2 hot path")
+    print("# OK: dormant faults plane within the gate")
+
+
 def main() -> None:
+    if "--faults-overhead" in sys.argv:
+        faults_overhead(gate=float(_flag_value("--gate", "0.01")))
+        return
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     if len(args) != 2:
         raise SystemExit(__doc__)

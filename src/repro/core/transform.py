@@ -73,7 +73,42 @@ import jax.numpy as jnp
 from repro.engine.pyramid import Detail, Pyramid  # re-exported for compat
 
 __all__ = ["Pyramid", "dwt2", "idwt2", "flatten_pyramid",
-           "unflatten_pyramid"]
+           "unflatten_pyramid", "validate_finite", "VALIDATE_MODES"]
+
+#: accepted values of the ``validate`` parameter (None = no checking)
+VALIDATE_MODES = (None, "nan")
+
+
+def validate_finite(x, mode, what: str = "input") -> None:
+    """Opt-in input validation at the plan boundary.
+
+    ``mode=None`` is a no-op (the production default: validation costs a
+    full device sync + sweep).  ``mode="nan"`` rejects arrays containing
+    NaN/Inf with an actionable error *before* the transform runs —
+    garbage coefficients otherwise propagate silently through every
+    pyramid level and into downstream consumers.  Pyramids are checked
+    plane by plane.
+    """
+    if mode is None:
+        return
+    if mode not in VALIDATE_MODES:
+        raise ValueError(f"unknown validate mode {mode!r}; "
+                         f"available: {VALIDATE_MODES}")
+    import numpy as np
+    if isinstance(x, Pyramid):
+        validate_finite(x.ll, mode, what=f"{what} (LL plane)")
+        for lvl, dd in enumerate(x.details):
+            for band, d in zip(("HL", "LH", "HH"), dd):
+                validate_finite(d, mode,
+                                what=f"{what} ({band} plane, level {lvl})")
+        return
+    arr = np.asarray(x)
+    if not np.isfinite(arr).all():
+        bad = int(arr.size - np.isfinite(arr).sum())
+        raise ValueError(
+            f"{what} contains {bad} non-finite value(s) (NaN/Inf), "
+            f"rejected by validate='nan' at the plan boundary; sanitize "
+            f"the input or drop validate to accept it")
 
 
 def _plan_for(shape, dtype, wavelet, levels, scheme, optimize, backend,
@@ -90,7 +125,7 @@ def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
          scheme: str = "ns-polyconv", optimize: bool = False,
          backend: str = "jnp", fuse: str = "none",
          boundary: str = "periodic", compute_dtype: str = "float32",
-         tap_opt: str = "full", tiles=None) -> Pyramid:
+         tap_opt: str = "full", tiles=None, validate=None) -> Pyramid:
     """Multi-level forward 2-D DWT of a (batch of) image(s) (..., H, W).
 
     H and W must be divisible by 2**levels.  Dispatches through the
@@ -108,7 +143,10 @@ def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
     pair, or None) runs the transform over a grid of halo-padded tiles
     instead of one monolithic plane — same coefficients (bit-identical
     at ``tap_opt`` "off"/"exact"), tiled execution; see
-    :mod:`repro.tiling`.
+    :mod:`repro.tiling`.  ``validate="nan"`` (opt-in; default off)
+    rejects NaN/Inf inputs at the plan boundary with an actionable
+    error instead of propagating garbage coefficients
+    (:func:`validate_finite`).
 
     >>> import jax.numpy as jnp
     >>> from repro.core import dwt2
@@ -124,6 +162,7 @@ def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
     True
     """
     x = jnp.asarray(x)
+    validate_finite(x, validate, what="dwt2 input")
     plan = _plan_for(x.shape, x.dtype, wavelet, levels, scheme, optimize,
                      backend, fuse, boundary, compute_dtype, tap_opt, tiles)
     return plan.execute(x)
@@ -133,10 +172,11 @@ def idwt2(pyr: Pyramid, wavelet: str = "cdf97",
           scheme: str = "ns-polyconv", optimize: bool = False,
           backend: str = "jnp", fuse: str = "none",
           boundary: str = "periodic", compute_dtype: str = "float32",
-          tap_opt: str = "full", tiles=None) -> jax.Array:
+          tap_opt: str = "full", tiles=None, validate=None) -> jax.Array:
     """Inverse of :func:`dwt2` (shares the forward transform's plan
     cache key family; pass the same ``wavelet``/``scheme``/backend
-    arguments as the forward call).
+    arguments as the forward call).  ``validate="nan"`` rejects
+    pyramids with NaN/Inf coefficient planes at the plan boundary.
 
     >>> import jax.numpy as jnp
     >>> from repro.core import dwt2, idwt2
@@ -148,6 +188,7 @@ def idwt2(pyr: Pyramid, wavelet: str = "cdf97",
     >>> bool(jnp.allclose(rec, x, atol=1e-3))
     True
     """
+    validate_finite(pyr, validate, what="idwt2 input pyramid")
     ll = jnp.asarray(pyr.ll)
     levels = pyr.levels
     shape = ll.shape[:-2] + (ll.shape[-2] << levels, ll.shape[-1] << levels)

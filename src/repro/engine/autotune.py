@@ -137,7 +137,9 @@ def save_entry(scheme: str, shape: Tuple[int, int], fuse: str, backend: str,
     fp = fingerprint if fingerprint is not None else device_fingerprint()
     table[table_key(scheme, shape, fuse, backend, fp)] = [int(block[0]),
                                                           int(block[1])]
-    with open(p, "w") as f:
-        json.dump(table, f, indent=1, sort_keys=True)
-        f.write("\n")
+    # atomic replace (write-temp + fsync + rename): a kill mid-save
+    # leaves the previous complete table, never a torn JSON document
+    from repro import ioutil
+    ioutil.atomic_write_text(
+        str(p), json.dumps(table, indent=1, sort_keys=True) + "\n")
     clear_cache()

@@ -137,6 +137,7 @@ def clear_plan_cache() -> None:
 _SERVE_ZERO = {
     "submitted": 0, "served": 0, "failed": 0, "rejected": 0,
     "redispatched": 0, "worker_deaths": 0, "workers_spawned": 0,
+    "deadline_exceeded": 0, "quarantined": 0, "breaker_rejections": 0,
     "batches": 0, "padded_images": 0, "mean_occupancy": None,
     "latency_samples": 0, "latency_dropped": 0,
     "p50_ms": None, "p99_ms": None, "img_per_s": None,
@@ -148,6 +149,8 @@ _TELEMETRY_ZERO = {"mode": "off", "metrics": 0, "series": 0,
                    "dropped_series": 0,
                    "spans": {"recorded": 0, "resident": 0, "dropped": 0,
                              "capacity": 0}}
+_FAULTS_ZERO = {"active": False, "injections": 0, "enabled": True,
+                "fallbacks": 0, "retries": 0}
 
 
 def _section(zero: dict, read) -> dict:
@@ -183,7 +186,9 @@ def stats() -> dict:
     >>> from repro import engine
     >>> s = engine.stats()
     >>> sorted(s)
-    ['auto', 'backends', 'block_table', 'plan_cache', 'plans', 'pyramid', 'serve', 'telemetry']
+    ['auto', 'backends', 'block_table', 'faults', 'plan_cache', 'plans', 'pyramid', 'serve', 'telemetry']
+    >>> sorted(s['faults'])[:3]          # repro.faults plane + policies
+    ['active', 'enabled', 'fallbacks']
     >>> sorted(k for k in s['serve'] if k.startswith('p'))
     ['p50_ms', 'p99_ms', 'padded_images']
     >>> [row["backend"] for row in s["backends"]]
@@ -240,7 +245,12 @@ def stats() -> dict:
         from repro.serve import metrics as SM
         return SM.serve_stats()
 
+    def _faults():
+        from repro import faults as F
+        return F.stats()
+
     return {"plan_cache": _GLOBAL.stats(),
+            "faults": _section(_FAULTS_ZERO, _faults),
             "pyramid": _section(_PYRAMID_ZERO, lambda: dict(P.COUNTERS)),
             "auto": _section(_AUTO_ZERO, _auto),
             "block_table": _section(

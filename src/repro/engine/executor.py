@@ -30,6 +30,7 @@ from repro.kernels import polyphase as PP
 from repro.compiler import conv as CV
 from repro.compiler import execute as CX
 from repro import telemetry as T
+from repro.faults import inject as FI
 
 
 def apply_steps_jnp(steps: Sequence[PP.StepSpec], planes: S.Planes
@@ -153,6 +154,7 @@ def make_pyramid_forward(plan):
 
     def run(x):
         PLAN.PYRAMID_LAUNCHES.inc()
+        FI.maybe_inject("pyramid.launch", op="forward", scheme=scheme)
         with T.span("pyramid.launch", op="forward", levels=levels,
                     scheme=scheme):
             ll, details = fn(x)
@@ -171,6 +173,7 @@ def make_pyramid_inverse(plan):
 
     def run(ll, details):
         PLAN.PYRAMID_LAUNCHES.inc()
+        FI.maybe_inject("pyramid.launch", op="inverse", scheme=scheme)
         with T.span("pyramid.launch", op="inverse", levels=levels,
                     scheme=scheme):
             return fn(ll, tuple(details[::-1]))

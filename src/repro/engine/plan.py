@@ -55,6 +55,8 @@ from repro import compiler as C
 from repro import telemetry as T
 from repro.engine import autotune
 from repro.engine import backends as B
+from repro.faults import degrade as R
+from repro.faults import inject as FI
 
 FUSE_MODES = ("none", "scheme", "levels", "pyramid")
 BOUNDARIES = ("periodic",)
@@ -255,7 +257,9 @@ class DwtPlan:
                        scheme=k.scheme)
         with T.span("execute.forward", backend=k.backend, fuse=k.fuse,
                     scheme=k.scheme, levels=k.levels) as sp:
-            ll, details = self._forward(x)
+            # resilient dispatch: retry in place, then walk the
+            # capability-checked degradation chain (repro.faults.degrade)
+            ll, details = R.dispatch(self, "forward", (x,))
         if sp.duration is not None:
             T.record_execution(self, sp.duration, op="forward")
         return Pyramid(ll=ll, details=list(details))
@@ -271,8 +275,8 @@ class DwtPlan:
                        scheme=k.scheme)
         with T.span("execute.inverse", backend=k.backend, fuse=k.fuse,
                     scheme=k.scheme, levels=k.levels) as sp:
-            out = self._inverse(pyr.ll,
-                                tuple(tuple(d) for d in pyr.details))
+            out = R.dispatch(self, "inverse",
+                             (pyr.ll, tuple(tuple(d) for d in pyr.details)))
         if sp.duration is not None:
             T.record_execution(self, sp.duration, op="inverse")
         return out
@@ -404,6 +408,7 @@ def build_plan(key: PlanKey,
     """
     with T.span("plan.build", backend=key.backend, fuse=key.fuse,
                 scheme=key.scheme, levels=key.levels):
+        FI.maybe_inject("plan.build", backend=key.backend, fuse=key.fuse)
         return _build_plan(key, block_target)
 
 

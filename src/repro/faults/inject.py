@@ -1,0 +1,147 @@
+"""Injection hooks: the seams call here; the plan decides.
+
+Two hook shapes cover every site:
+
+* :func:`maybe_inject` — placed where a site *does* something: may
+  raise :class:`InjectedFault`, sleep (slow), or sleep-then-raise
+  (hang, modelling a stall the caller's deadline must cut short);
+* :func:`corrupt_output` — placed where a site *returns* something:
+  NaN-poisons (or perturbs) the value so downstream exactness checks
+  must catch it.
+
+Both are one-branch no-ops when no :class:`~repro.faults.plan.FaultPlan`
+is active (``_ACTIVE is None``), which is the production default —
+``benchmarks/compare_bench.py --faults-overhead`` CI-gates this at <1%
+of a small dwt2.
+
+The active plan comes from ``$REPRO_FAULTS`` (read once, at first
+import of :mod:`repro.faults`) or :func:`activate` (tests, chaos
+bench).  Every fired fault is counted in
+``repro_fault_injections_total{site, kind}`` so a chaos run can assert
+its schedule actually executed.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional, Tuple
+
+from repro.faults.plan import (FAULTS_ENV, KINDS, SEED_ENV, FaultPlan,
+                               FaultSpec)
+from repro import telemetry as T
+
+INJECTIONS = T.counter(
+    "repro_fault_injections_total",
+    "Injected faults fired, by site and kind",
+    labelnames=("site", "kind"))
+
+#: kinds expressible at a call-site hook (corrupt needs a value hook)
+CALL_KINDS: Tuple[str, ...] = ("raise", "hang", "slow")
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure (never raised in production).
+
+    Recovery policies treat it exactly like the organic failure it
+    models; tests and the chaos bench match on the type to tell
+    injected faults from real bugs.
+    """
+
+    def __init__(self, site: str, kind: str):
+        super().__init__(f"injected {kind} fault at site {site!r}")
+        self.site = site
+        self.kind = kind
+
+
+def activate(plan: Optional[FaultPlan]) -> Optional[FaultPlan]:
+    """Install ``plan`` as the active fault plan (None deactivates).
+
+    Returns the previous plan so tests can restore it.
+    """
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, plan
+    return prev
+
+
+def active() -> Optional[FaultPlan]:
+    """The currently active plan, or None (faults plane off)."""
+    return _ACTIVE
+
+
+def reload() -> Optional[FaultPlan]:
+    """(Re-)read ``$REPRO_FAULTS`` / ``$REPRO_FAULTS_SEED``, install and
+    return the resulting plan (None when unset).  Called once at package
+    import; callable again after an env change."""
+    text = os.environ.get(FAULTS_ENV, "").strip()
+    seed = int(os.environ.get(SEED_ENV, "0") or 0)
+    plan = FaultPlan.from_text(text, seed=seed) if text else None
+    activate(plan)
+    return plan
+
+
+def maybe_inject(site: str, **ctx) -> None:
+    """Fire the site's armed raise/hang/slow fault, if any.
+
+    Placed *inside* retry loops so a retried attempt redraws — a
+    ``prob`` fault can then be recovered by retry, while ``always``
+    exhausts the budget and exercises the degradation path.  ``ctx`` is
+    advisory (backend, shape, ...) and only used for error text.
+    """
+    if _ACTIVE is None:
+        return
+    spec = _ACTIVE.should_fire(site, CALL_KINDS)
+    if spec is None:
+        return
+    _fire(spec, ctx)
+
+
+def _fire(spec: FaultSpec, ctx: dict) -> None:
+    INJECTIONS.inc(site=spec.site, kind=spec.kind)
+    if spec.kind == "slow":
+        time.sleep(spec.sleep_s)
+        return
+    if spec.kind == "hang":
+        # A stall, not an error: sleep out the (long) delay, then raise
+        # so a workload without deadlines still terminates.  Real
+        # recovery must come from the caller's deadline firing first.
+        time.sleep(spec.sleep_s)
+    raise InjectedFault(spec.site, spec.kind)
+
+
+def corrupt_output(site: str, value):
+    """Fire the site's armed ``corrupt`` fault against a result value.
+
+    Returns ``value`` unchanged when nothing fires.  Arrays are
+    NaN-poisoned (first element) — the canonical silent-corruption
+    model the exactness verifier and ``validate="nan"`` guard must
+    catch; non-array values are replaced with None.
+    """
+    if _ACTIVE is None:
+        return value
+    spec = _ACTIVE.should_fire(site, ("corrupt",))
+    if spec is None:
+        return value
+    INJECTIONS.inc(site=spec.site, kind=spec.kind)
+    return _poison(value)
+
+
+def _poison(value):
+    import numpy as np
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.asarray(value).astype(value.dtype, copy=True)
+        if arr.size:
+            arr.reshape(-1)[0] = np.nan
+        return arr
+    if isinstance(value, tuple):
+        return tuple(_poison(v) for v in value)
+    return None
+
+
+def stats() -> dict:
+    """The ``engine.stats()["faults"]`` section: active plan + fires."""
+    if _ACTIVE is None:
+        return {"active": False, "injections": 0}
+    fired = sum(_ACTIVE.fired.values())
+    return {"active": True, "injections": fired, "plan": _ACTIVE.stats()}

@@ -9,6 +9,15 @@ launch count, and the modeled HBM bytes (the cost-model features, see
 ``$REPRO_PROFILE_STORE`` — so stores can be versioned, merged across
 machines (records from other devices are filtered out at query time by
 fingerprint), and re-read to reproduce identical predictions.
+
+Durability (PR 9): every record carries a crc32 checksum of its
+canonical payload, appends are flushed + fsync'd as one write, and the
+reader drops (and *counts*, in
+``repro_profile_store_corrupt_records_total{reason}``) any line that
+fails to parse or checksum — so a kill mid-append, a truncated copy, or
+a bad hand-merge degrades to "one fewer record" instead of poisoning
+predictions.  Records written before PR 9 (no ``crc`` field) are still
+accepted.
 """
 from __future__ import annotations
 
@@ -18,7 +27,15 @@ import os
 import pathlib
 from typing import List, Optional, Tuple
 
+from repro import ioutil
+from repro import telemetry as T
 from repro.engine.autotune import device_fingerprint
+from repro.faults import inject as FI
+
+CORRUPT_RECORDS = T.counter(
+    "repro_profile_store_corrupt_records_total",
+    "trace-store lines dropped at read time (torn tail, checksum "
+    "mismatch, unknown schema)", labelnames=("reason",))
 
 STORE_ENV = "REPRO_PROFILE_STORE"
 # src/repro/profiler/store.py -> profiler -> repro -> src -> repo root
@@ -94,16 +111,17 @@ class TraceRecord:
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
         d["v"] = 1
+        payload = json.dumps(d, sort_keys=True, default=str)
+        d["crc"] = ioutil.line_checksum(payload)
         return json.dumps(d, sort_keys=True, default=str)
 
     @classmethod
     def from_json(cls, line: str) -> Optional["TraceRecord"]:
-        try:
-            d = json.loads(line)
-        except ValueError:
-            return None
-        if not isinstance(d, dict) or d.pop("v", None) != 1:
-            return None
+        rec, _reason = parse_line(line)
+        return rec
+
+    @classmethod
+    def _from_dict(cls, d: dict) -> Optional["TraceRecord"]:
         try:
             return cls(
                 fingerprint=str(d["fingerprint"]),
@@ -124,6 +142,31 @@ class TraceRecord:
                 meta=dict(d.get("meta") or {}))
         except (KeyError, TypeError, ValueError):
             return None
+
+
+def parse_line(line: str) -> Tuple[Optional[TraceRecord], Optional[str]]:
+    """Parse one store line -> ``(record, None)`` or ``(None, reason)``
+    with reason in {"parse", "checksum", "schema"}.  Lines with no
+    ``crc`` field (pre-PR-9 stores) skip the checksum gate."""
+    try:
+        d = json.loads(line)
+    except ValueError:
+        return None, "parse"
+    if not isinstance(d, dict):
+        return None, "schema"
+    crc = d.pop("crc", None)
+    if crc is not None:
+        payload = json.dumps(d, sort_keys=True, default=str)
+        try:
+            ok = ioutil.checksum_ok(payload, crc)
+        except (TypeError, ValueError):
+            ok = False
+        if not ok:
+            return None, "checksum"
+    if d.pop("v", None) != 1:
+        return None, "schema"
+    rec = TraceRecord._from_dict(d)
+    return (rec, None) if rec is not None else (None, "schema")
 
 
 def record_from_key(key, block, time_s: float, hbm_bytes: int,
@@ -168,14 +211,17 @@ class TraceStore:
             return self._records
         records = []
         try:
+            FI.maybe_inject("profiler.store_read", path=str(self.path))
             with open(self.path) as f:
                 for line in f:
                     line = line.strip()
                     if not line:
                         continue
-                    rec = TraceRecord.from_json(line)
+                    rec, reason = parse_line(line)
                     if rec is not None:
                         records.append(rec)
+                    else:
+                        CORRUPT_RECORDS.inc(reason=reason)
         except OSError:
             records = []
         self._stamp, self._records = stamp, records
@@ -197,9 +243,15 @@ class TraceStore:
         if not records:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        FI.maybe_inject("profiler.store_write", path=str(self.path),
+                        n=len(records))
+        # one buffered write + fsync: a kill leaves at most one torn
+        # tail line, which parse_line detects (checksum) on re-read
+        text = "".join(rec.to_json() + "\n" for rec in records)
         with open(self.path, "a") as f:
-            for rec in records:
-                f.write(rec.to_json() + "\n")
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
         self._stamp = None               # force re-read on next query
 
     def __len__(self) -> int:

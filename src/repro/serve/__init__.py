@@ -14,6 +14,7 @@ without changing a single coefficient:
 
 Counters surface in ``repro.engine.stats()["serve"]``.
 """
+from repro.faults.policy import CircuitOpenError, DeadlineExceeded
 from repro.serve.bucket import (BucketKey, BucketSpec, Request,
                                 bucket_batches, padded_batch)
 from repro.serve.metrics import METRICS, reset as reset_metrics, serve_stats
@@ -23,6 +24,7 @@ from repro.serve.scheduler import (DwtServer, QueueFullError, ServeConfig,
 __all__ = [
     "DwtServer", "ServeConfig", "QueueFullError", "WorkerDied",
     "serve_map",
+    "DeadlineExceeded", "CircuitOpenError",
     "BucketKey", "BucketSpec", "Request", "padded_batch", "bucket_batches",
     "METRICS", "serve_stats", "reset_metrics",
 ]

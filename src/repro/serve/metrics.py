@@ -52,6 +52,18 @@ LATENCY = T.histogram(
 LATENCY_DROPPED = T.counter(
     "repro_serve_latency_samples_dropped_total",
     "raw latency samples evicted from the bounded percentile window")
+DEADLINE_EXCEEDED = T.counter(
+    "repro_serve_deadline_exceeded_total",
+    "requests failed by their per-request deadline "
+    "(ServeConfig.request_deadline_ms)")
+QUARANTINED = T.counter(
+    "repro_serve_quarantined_requests_total",
+    "requests re-dispatched as isolated singleton batches after their "
+    "batch killed more than one worker (poison-batch quarantine)")
+BREAKER_REJECTIONS = T.counter(
+    "repro_serve_breaker_rejections_total",
+    "requests fast-failed because their bucket's circuit breaker was "
+    "open")
 
 
 def _quantile(sorted_vals, q: float) -> float:
@@ -66,7 +78,8 @@ class ServeMetrics:
     throughput timestamps the registry does not model."""
 
     _METRICS = (REQUESTS, BATCHES, PADDED_IMAGES, WORKER_DEATHS,
-                WORKERS_SPAWNED, LATENCY, LATENCY_DROPPED)
+                WORKERS_SPAWNED, LATENCY, LATENCY_DROPPED,
+                DEADLINE_EXCEEDED, QUARANTINED, BREAKER_REJECTIONS)
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -154,6 +167,16 @@ class ServeMetrics:
     def worker_spawned(self) -> None:
         WORKERS_SPAWNED.inc()
 
+    def deadline_exceeded(self, n: int = 1) -> None:
+        DEADLINE_EXCEEDED.inc(n)
+        REQUESTS.inc(n, event="failed")
+
+    def quarantined(self, n: int = 1) -> None:
+        QUARANTINED.inc(n)
+
+    def breaker_rejected(self, n: int = 1) -> None:
+        BREAKER_REJECTIONS.inc(n)
+
     # -- reading -------------------------------------------------------
     def snapshot(self) -> dict:
         """The ``engine.stats()["serve"]`` payload: request/batch
@@ -180,6 +203,9 @@ class ServeMetrics:
             "batches": batches,
             "padded_images": self.padded_images,
             "mean_occupancy": (occupancy / batches if batches else None),
+            "deadline_exceeded": int(DEADLINE_EXCEEDED.value()),
+            "quarantined": int(QUARANTINED.value()),
+            "breaker_rejections": int(BREAKER_REJECTIONS.value()),
             "latency_samples": len(lat),
             "latency_dropped": int(LATENCY_DROPPED.value()),
             "p50_ms": (_quantile(lat, 0.50) * 1e3 if lat else None),

@@ -43,9 +43,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import telemetry as T
+from repro.core.transform import validate_finite
 from repro.distributed.fault_tolerance import (FaultToleranceConfig,
                                                HeartbeatTracker)
 from repro.engine.pyramid import Pyramid
+from repro.faults import inject as FI
+from repro.faults.policy import (CircuitBreaker, CircuitOpenError,
+                                 DeadlineExceeded)
 from repro.serve import bucket as BK
 from repro.serve.metrics import METRICS
 
@@ -77,6 +81,23 @@ class ServeConfig:
                         keeps accepting traffic).
     ``max_redispatch``— how many dead-worker re-dispatches one request
                         survives before it fails.
+    ``request_deadline_ms`` — per-request wall-clock budget (submit ->
+                        result); a request still unresolved when it
+                        expires fails with
+                        :class:`~repro.faults.policy.DeadlineExceeded`
+                        instead of hanging on a stalled worker.  None
+                        (default) keeps requests unbounded.
+    ``breaker_threshold`` — per-bucket circuit breaker: after this many
+                        *consecutive* batch failures the bucket opens
+                        and requests fast-fail with
+                        :class:`~repro.faults.policy.CircuitOpenError`
+                        for ``breaker_cooldown_s``, then a single
+                        half-open probe decides (0 disables; see
+                        docs/resilience.md).
+    ``validate``      — "nan" rejects NaN/Inf request payloads at
+                        submit (:func:`repro.core.transform
+                        .validate_finite`); None (default) skips the
+                        sweep.
     """
 
     max_batch: int = 16
@@ -87,6 +108,10 @@ class ServeConfig:
     max_redispatch: int = 2
     soft_timeout_s: float = 1.0      # heartbeat: straggler threshold
     hard_timeout_s: float = 30.0     # heartbeat: dead threshold
+    request_deadline_ms: Optional[float] = None
+    breaker_threshold: int = 0       # 0 = breaker disabled
+    breaker_cooldown_s: float = 1.0
+    validate: Optional[str] = None   # "nan" = reject non-finite inputs
 
     def __post_init__(self):
         if self.backpressure not in ("wait", "reject"):
@@ -96,6 +121,13 @@ class ServeConfig:
                 or self.num_workers < 1:
             raise ValueError("max_batch, max_queue and num_workers must "
                              "be >= 1")
+        if self.request_deadline_ms is not None \
+                and self.request_deadline_ms <= 0:
+            raise ValueError("request_deadline_ms must be positive "
+                             "(or None to disable)")
+        if self.validate not in (None, "nan"):
+            raise ValueError(f"validate must be None or 'nan', "
+                             f"got {self.validate!r}")
 
 
 class DwtServer:
@@ -121,6 +153,7 @@ class DwtServer:
         self._worker_seq = 0
         self._in_flight: Dict[str, Tuple[BK.BucketKey, list]] = {}
         self._fail_next: set = set()
+        self._breakers: Dict[BK.BucketKey, CircuitBreaker] = {}
         self._tasks: List[asyncio.Task] = []
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self.tracker: Optional[HeartbeatTracker] = None
@@ -196,6 +229,7 @@ class DwtServer:
         resolves to the host-side :class:`Pyramid` once its bucket's
         batched plan execution scatters."""
         x = np.asarray(x)
+        validate_finite(x, self.cfg.validate, what="serve request")
         key = BK.request_key(
             x.shape, x.dtype, op="dwt2", wavelet=wavelet, scheme=scheme,
             levels=levels, backend=backend, optimize=optimize, fuse=fuse,
@@ -217,6 +251,7 @@ class DwtServer:
             ll=np.asarray(pyr.ll),
             details=[tuple(np.asarray(d) for d in dd)
                      for dd in pyr.details])
+        validate_finite(host, self.cfg.validate, what="serve request")
         levels = host.levels
         shape = (host.ll.shape[-2] << levels, host.ll.shape[-1] << levels)
         key = BK.request_key(
@@ -250,7 +285,19 @@ class DwtServer:
             self._buckets_seen.add(key)
             self._arrival.set()
         try:
-            return await fut
+            if self.cfg.request_deadline_ms is None:
+                return await fut
+            try:
+                return await asyncio.wait_for(
+                    fut, self.cfg.request_deadline_ms / 1e3)
+            except asyncio.TimeoutError:
+                # wait_for cancelled the future, so a late batch result
+                # is discarded (scatter checks future.done())
+                METRICS.deadline_exceeded()
+                raise DeadlineExceeded(
+                    f"request exceeded its "
+                    f"{self.cfg.request_deadline_ms:g} ms deadline "
+                    f"(op={key.op}, bucket {key.h}x{key.w})") from None
         finally:
             self._pending -= 1
             self._capacity.set()
@@ -341,6 +388,32 @@ class DwtServer:
             raise
         except WorkerDied as e:
             self._on_worker_death(name, str(e))
+        except Exception as e:
+            # a non-fatal Python exception escaping the worker loop
+            # itself (not batch execution — that path fails futures in
+            # place): fail the claimed batch's futures with the real
+            # exception instead of leaving its requests hanging, then
+            # treat the worker as dead so the pool heals
+            in_flight = self._in_flight.pop(name, None)
+            if in_flight is not None:
+                _, reqs = in_flight
+                METRICS.request_failed(len(reqs))
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+            self.tracker.mark_dead(name)
+            METRICS.worker_died(redispatched=0)
+            if self._running and self.tracker.should_restart_elastic():
+                self._spawn_worker()
+
+    def _breaker(self, key: BK.BucketKey) -> Optional[CircuitBreaker]:
+        if self.cfg.breaker_threshold <= 0:
+            return None
+        br = self._breakers.get(key)
+        if br is None:
+            br = self._breakers[key] = CircuitBreaker(
+                self.cfg.breaker_threshold, self.cfg.breaker_cooldown_s)
+        return br
 
     async def _worker_loop(self, name: str) -> None:
         idle_beat = max(0.05, self.cfg.soft_timeout_s / 2)
@@ -354,6 +427,22 @@ class DwtServer:
                 continue
             self.tracker.beat(name, step)
             self._in_flight[name] = (key, reqs)
+            breaker = self._breaker(key)
+            if breaker is not None and not breaker.allow():
+                # bucket's circuit is open: fast-fail without burning a
+                # worker thread on a config that keeps failing
+                self._in_flight.pop(name, None)
+                METRICS.breaker_rejected(len(reqs))
+                METRICS.request_failed(len(reqs))
+                err = CircuitOpenError(
+                    f"circuit open for bucket {key.op} {key.h}x{key.w} "
+                    f"({key.backend}/{key.fuse}) after repeated batch "
+                    f"failures; retry after "
+                    f"{self.cfg.breaker_cooldown_s:g}s cooldown")
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(err)
+                continue
             if name in self._fail_next:
                 self._fail_next.discard(name)
                 raise WorkerDied(f"{name}: injected failure")
@@ -364,18 +453,27 @@ class DwtServer:
                 # an execution error (bad geometry, backend reject, ...)
                 # fails this batch's requests; the worker itself survives
                 self._in_flight.pop(name, None)
+                if breaker is not None:
+                    breaker.record(ok=False)
                 METRICS.request_failed(len(reqs))
                 for r in reqs:
                     if not r.future.done():
                         r.future.set_exception(e)
                 continue
-            self._in_flight.pop(name, None)
+            # keep the batch in _in_flight until its futures are
+            # resolved: an exception anywhere in this window (a metrics
+            # hook, breaker bookkeeping) then escapes to _run_worker's
+            # generic arm, which fails the claimed futures instead of
+            # leaving the requests hanging forever
+            if breaker is not None:
+                breaker.record(ok=True)
             now = self._loop.time()
             METRICS.batch_done(real=len(reqs), padded=padded,
                                latencies_s=[now - r.t for r in reqs])
             for r, out in zip(reqs, outs):
                 if not r.future.done():
                     r.future.set_result(out)
+            self._in_flight.pop(name, None)
             step += 1
             self.tracker.beat(name, step)
 
@@ -400,7 +498,17 @@ class DwtServer:
                     survivors.append(r)
         METRICS.worker_died(redispatched=len(survivors))
         if survivors:
-            self._batch_q.put_nowait((key, survivors))
+            if max(r.attempts for r in survivors) >= 2:
+                # poison-batch quarantine: this batch has now killed
+                # more than one worker, so one poisoned request is the
+                # likely cause — re-dispatch survivors as isolated
+                # singleton batches so the poison request exhausts its
+                # own budget without cascading onto its batch-mates
+                METRICS.quarantined(len(survivors))
+                for r in survivors:
+                    self._batch_q.put_nowait((key, [r]))
+            else:
+                self._batch_q.put_nowait((key, survivors))
         if self._running and self.tracker.should_restart_elastic():
             self._spawn_worker()
 
@@ -423,9 +531,11 @@ class DwtServer:
         b = BK.padded_batch(n, self.cfg.max_batch)
         with T.span("serve.batch", op=key.op, scheme=key.scheme,
                     real=n, padded=b):
+            FI.maybe_inject("serve.batch", op=key.op, batch=b)
             plan = E.get_plan(**key.plan_kwargs(b))
             if key.op == "dwt2":
                 with T.span("serve.stack_h2d", op=key.op, batch=b):
+                    FI.maybe_inject("serve.stack_h2d", op=key.op)
                     xs = jnp.asarray(BK.stack_images(reqs, b))
                 with T.span("serve.execute", op=key.op, batch=b,
                             backend=plan.key.backend):
@@ -433,6 +543,7 @@ class DwtServer:
                 with T.span("serve.scatter", op=key.op, batch=b):
                     return BK.scatter_pyramid(pyr, n), b
             with T.span("serve.stack_h2d", op=key.op, batch=b):
+                FI.maybe_inject("serve.stack_h2d", op=key.op)
                 host = BK.stack_pyramids(reqs, b)
                 dev = Pyramid(ll=jnp.asarray(host.ll),
                               details=[tuple(jnp.asarray(d) for d in dd)

@@ -13,9 +13,12 @@ Entry points: :func:`dwt2_tiled` / :func:`idwt2_tiled` (or simply
 from repro.tiling.grid import (TileGrid, build_grid, level_reach,
                                pyramid_margin, validate_geometry)
 from repro.tiling.api import dwt2_tiled, idwt2_tiled
+from repro.tiling.checkpoint import (BandCheckpoint, CheckpointMismatch,
+                                     open_checkpoint)
 from repro.tiling.stream import stream_dwt2
 
 __all__ = [
     "TileGrid", "build_grid", "level_reach", "pyramid_margin",
     "validate_geometry", "dwt2_tiled", "idwt2_tiled", "stream_dwt2",
+    "BandCheckpoint", "CheckpointMismatch", "open_checkpoint",
 ]

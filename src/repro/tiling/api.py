@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro import telemetry as T
 from repro.engine.pyramid import Pyramid
+from repro.faults import inject as FI
 from repro.tiling import exchange as EX
 
 
@@ -57,8 +58,12 @@ def make_tiled_forward(plan):
 
     def run(x):
         # spans no-op inside jit tracing (fuse="levels"); on the eager
-        # paths they time gather / transform / stitch separately
+        # paths they time gather / transform / stitch separately.  The
+        # fault site likewise fires per call eagerly, once at trace
+        # time under jit (python-level hook, like the spans)
         with T.span("tile.halo_gather", op="forward", tiles=grid.count):
+            FI.maybe_inject("tiling.halo_gather", op="forward",
+                            tiles=grid.count)
             wins = EX.gather_windows(x, grid)
         with T.span("tile.window_transform", op="forward",
                     tiles=grid.count, backend=key.backend):
@@ -84,6 +89,8 @@ def make_tiled_inverse(plan):
 
     def run(ll, details):
         with T.span("tile.halo_gather", op="inverse", tiles=grid.count):
+            FI.maybe_inject("tiling.halo_gather", op="inverse",
+                            tiles=grid.count)
             wll = EX.gather_plane_windows(ll, grid, levels - 1)
             wdet = tuple(
                 tuple(EX.gather_plane_windows(d, grid, levels - 1 - k)

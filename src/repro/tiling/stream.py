@@ -27,13 +27,15 @@ tests pin down), and to fp32 tolerance under the default jitted
 from __future__ import annotations
 
 from collections import deque
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro import telemetry as T
 from repro.engine.pyramid import Pyramid
+from repro.faults import inject as FI
+from repro.faults.policy import retry_call
 from repro.tiling import exchange as EX
 
 
@@ -51,13 +53,27 @@ def stream_dwt2(image, *, wavelet: str = "cdf97", levels: int = 1,
                 optimize: bool = False, backend: str = "jnp",
                 fuse: str = "levels", boundary: str = "periodic",
                 compute_dtype: str = "float32", tap_opt: str = "full",
-                max_inflight: int = 2) -> Pyramid:
+                max_inflight: int = 2, checkpoint: Optional[str] = None,
+                retries: int = 0) -> Pyramid:
     """Multi-level forward DWT of a host-resident (H, W) image, streamed
     band by band; returns a host (numpy) :class:`Pyramid`.
 
     ``image`` is anything numpy can fancy-index — an ``np.ndarray`` or an
     ``np.memmap`` over a file larger than device memory; at most
     ``max_inflight`` tile-row bands of output are in flight on device.
+
+    ``checkpoint`` names a directory for the journaled band checkpoint
+    (:mod:`repro.tiling.checkpoint`): the pyramid materializes into
+    memmaps there and every completed band is recorded in a fsync'd
+    write-ahead journal, so a killed run resumes by passing the same
+    directory — already-journaled bands are skipped and the returned
+    pyramid is backed by the checkpoint's memmaps.  The configuration
+    is pinned in the checkpoint manifest; resuming with different
+    parameters raises :class:`~repro.tiling.checkpoint.CheckpointMismatch`.
+
+    ``retries`` > 0 re-attempts a failed band that many times before
+    giving up (a failed drain recomputes the band from host data, since
+    its in-flight device buffers may be poisoned).
 
     >>> import numpy as np
     >>> from repro.tiling import stream_dwt2
@@ -111,12 +127,26 @@ def stream_dwt2(image, *, wavelet: str = "cdf97", levels: int = 1,
         band = jax.jit(band_fn) if fuse == "levels" else band_fn
         plan._stream_band = band
 
-    # preallocated host pyramid (coarsest-first details, like the engine)
-    f_top = 1 << levels
-    ll_out = np.empty((h // f_top, w // f_top), dtype)
-    det_out = [tuple(np.empty((h >> (lvl + 1), w >> (lvl + 1)), dtype)
-                     for _ in range(3))
-               for lvl in [levels - 1 - k for k in range(levels)]]
+    # preallocated host pyramid (coarsest-first details, like the engine);
+    # with a checkpoint the planes are directory-backed memmaps instead
+    ckpt = None
+    done: set = set()
+    if checkpoint is not None:
+        from repro.tiling import checkpoint as CK
+        ckpt = CK.open_checkpoint(checkpoint, {
+            "wavelet": wavelet, "scheme": scheme, "levels": levels,
+            "tiles": list(tiles), "optimize": bool(optimize),
+            "backend": backend, "fuse": fuse, "boundary": boundary,
+            "compute_dtype": compute_dtype, "tap_opt": tap_opt,
+            "h": h, "w": w, "dtype": str(dtype), "nr": nr})
+        ll_out, det_out = ckpt.ll, ckpt.details
+        done = set(ckpt.completed)
+    else:
+        f_top = 1 << levels
+        ll_out = np.empty((h // f_top, w // f_top), dtype)
+        det_out = [tuple(np.empty((h >> (lvl + 1), w >> (lvl + 1)), dtype)
+                         for _ in range(3))
+                   for lvl in [levels - 1 - k for k in range(levels)]]
 
     def write_rows(dst: np.ndarray, cores, band_i: int, lvl: int) -> None:
         f = 1 << (lvl + 1)
@@ -133,23 +163,52 @@ def stream_dwt2(image, *, wavelet: str = "cdf97", levels: int = 1,
             for dst, cores in zip(det_out[k], det):
                 write_rows(dst, cores, i, levels - 1 - k)
 
+    def produce(i):
+        """Gather + dispatch one band (the recomputable unit)."""
+        with T.span("stream.host_gather", band=i):
+            FI.maybe_inject("stream.host_gather", band=i)
+            wins = _host_band(image, ri[i], ci)
+        with T.span("stream.h2d_dispatch", band=i):
+            FI.maybe_inject("stream.h2d_dispatch", band=i)
+            return band(jax.device_put(wins))  # async: overlaps bands
+
+    def produce_r(i):
+        if retries > 0:
+            return retry_call(lambda: produce(i), site="stream.band",
+                              retries=retries)
+        return produce(i)
+
+    def drain_one(item) -> None:
+        """Drain one band, retrying by *recomputing* it — a failed
+        drain's in-flight device buffers may carry the failure — then
+        durably journal it when checkpointing."""
+        i = item[0]
+        attempts = 0
+        while True:
+            try:
+                with T.span("stream.drain", band=i):
+                    FI.maybe_inject("stream.drain", band=i)
+                    drain(item)
+                break
+            except Exception:
+                if attempts >= retries:
+                    raise
+                attempts += 1
+                item = (i, produce_r(i))
+        if ckpt is not None:
+            ckpt.commit_band(i)
+
     # under REPRO_TELEMETRY=spans the three pipeline stages time
     # separately: host I/O (gather), h2d + async dispatch, and the
     # blocking drain (device compute the overlap did not hide)
     pending = deque()
     with T.span("stream.dwt2", bands=nr, levels=levels, backend=backend):
         for i in range(nr):
-            with T.span("stream.host_gather", band=i):
-                wins = _host_band(image, ri[i], ci)
-            with T.span("stream.h2d_dispatch", band=i):
-                outs = band(jax.device_put(wins))  # async: overlaps bands
-            pending.append((i, outs))
+            if i in done:       # journaled by an earlier (killed) run
+                continue
+            pending.append((i, produce_r(i)))
             while len(pending) > max_inflight:
-                item = pending.popleft()
-                with T.span("stream.drain", band=item[0]):
-                    drain(item)
+                drain_one(pending.popleft())
         while pending:
-            item = pending.popleft()
-            with T.span("stream.drain", band=item[0]):
-                drain(item)
+            drain_one(pending.popleft())
     return Pyramid(ll=ll_out, details=det_out)

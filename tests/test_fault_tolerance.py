@@ -91,3 +91,52 @@ def test_train_crash_restart_replays_exactly(tmp_path):
     tail_a = res_a.losses[res_b.restored_from:]
     np.testing.assert_allclose(res_b.losses[-len(tail_a):], tail_a,
                                rtol=2e-4, atol=1e-5)
+
+
+def test_beat_revives_marked_dead_host():
+    """Revival race (PR 9): a worker declared dead out-of-band that
+    heartbeats again rejoins the pool — mark_dead must not be a
+    permanent sentence, and a fresh mark_dead after the revival must
+    stick again."""
+    clock = FakeClock()
+    ft = FaultToleranceConfig(soft_timeout_s=10, hard_timeout_s=100,
+                              quorum_fraction=0.5)
+    tr = HeartbeatTracker(["h0", "h1"], ft, clock=clock)
+    tr.mark_dead("h0")
+    assert tr.dead() == ["h0"] and tr.should_restart_elastic()
+    clock.t = 1.0
+    tr.beat("h0", step=1)                  # the "dead" worker speaks
+    assert tr.dead() == [] and not tr.should_restart_elastic()
+    tr.mark_dead("h0")                     # flap back: sticks again
+    assert tr.dead() == ["h0"]
+    clock.t = 200.0                        # and hard timeout still
+    tr.beat("h0", step=2)                  # applies independently of
+    assert "h1" in tr.dead()               # the mark_dead bookkeeping
+    assert tr.should_restart_elastic()
+
+
+def test_all_workers_dead_no_quorum_restarts():
+    clock = FakeClock()
+    ft = FaultToleranceConfig(soft_timeout_s=10, hard_timeout_s=100,
+                              quorum_fraction=0.5)
+    tr = HeartbeatTracker(["h0", "h1"], ft, clock=clock)
+    tr.mark_dead("h0")
+    tr.mark_dead("h1")
+    assert sorted(tr.dead()) == ["h0", "h1"]
+    assert not tr.have_quorum()
+    assert tr.should_restart_elastic()
+    assert tr.stragglers() == []           # dead, not straggling
+
+
+def test_should_restart_elastic_edges():
+    clock = FakeClock()
+    ft = FaultToleranceConfig(soft_timeout_s=10, hard_timeout_s=100,
+                              quorum_fraction=0.5)
+    tr = HeartbeatTracker([], ft, clock=clock)
+    assert not tr.should_restart_elastic()  # empty pool: nothing dead
+    tr.register("h0")
+    assert not tr.should_restart_elastic()  # fresh registration is alive
+    clock.t = 99.0
+    assert not tr.should_restart_elastic()  # silent but inside hard limit
+    clock.t = 101.0
+    assert tr.should_restart_elastic()      # one tick past -> dead

@@ -1,0 +1,233 @@
+"""Fault plane + recovery policies: grammar, determinism, injection
+hooks, retry/deadline, circuit breaker, degradation chain.
+
+Unit-level coverage of :mod:`repro.faults` (the integration story —
+faults riding through the engine, serve and streaming layers — lives in
+tests/test_resilience.py and benchmarks/chaos_bench.py).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.faults import inject as FJ
+from repro.faults import plan as FP
+from repro.faults.policy import (CircuitBreaker, Deadline, DeadlineExceeded,
+                                 retry_call)
+
+
+@pytest.fixture(autouse=True)
+def _no_active_plan():
+    """Every test starts and ends with the plane disarmed."""
+    prev = FJ.activate(None)
+    yield
+    FJ.activate(prev)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# -- grammar ----------------------------------------------------------
+
+def test_parse_grammar_variants():
+    specs = FP.parse_faults(
+        "pyramid.launch=0.05,stream.h2d_dispatch=once,"
+        "serve.batch=slow:0.5:0.02,execute.forward=corrupt:always,"
+        "stream.drain=hang:1.0")
+    assert specs["pyramid.launch"].kind == "raise"       # default kind
+    assert specs["pyramid.launch"].prob == 0.05
+    assert specs["stream.h2d_dispatch"].once
+    s = specs["serve.batch"]
+    assert (s.kind, s.prob, s.sleep_s) == ("slow", 0.5, 0.02)
+    c = specs["execute.forward"]
+    assert c.kind == "corrupt" and c.prob is None and not c.once
+    h = specs["stream.drain"]
+    assert h.kind == "hang" and h.prob == 1.0
+    assert specs["pyramid.launch"].sleep_s == FP.DEFAULT_SLOW_S
+
+
+def test_parse_rejects_unknown_site_and_bad_specs():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FP.parse_faults("pyramid.lanch=0.05")            # typo is an error
+    with pytest.raises(ValueError, match="probability.*in \\(0, 1\\]"):
+        FP.parse_faults("serve.batch=1.5")
+    with pytest.raises(ValueError, match="must be a probability"):
+        FP.parse_faults("serve.batch=sometimes")
+    with pytest.raises(ValueError, match="malformed fault entry"):
+        FP.parse_faults("serve.batch")
+    with pytest.raises(ValueError, match="trailing fields"):
+        FP.parse_faults("serve.batch=slow:0.5:0.02:7")
+    with pytest.raises(ValueError, match="no trigger"):
+        FP.parse_faults("serve.batch=")
+
+
+def test_scenario_file_roundtrip(tmp_path):
+    path = tmp_path / "scenario.json"
+    path.write_text(json.dumps(
+        {"seed": 7, "faults": {"serve.batch": "slow:0.5",
+                               "pyramid.launch": "once"}}))
+    plan = FP.FaultPlan.from_text(f"@{path}")
+    assert plan.seed == 7
+    assert plan.specs["serve.batch"].kind == "slow"
+    assert plan.specs["pyramid.launch"].once
+    (tmp_path / "bad.json").write_text(json.dumps({"faults": "nope"}))
+    with pytest.raises(ValueError, match="'faults' mapping"):
+        FP.load_scenario(str(tmp_path / "bad.json"))
+
+
+# -- determinism ------------------------------------------------------
+
+def test_same_seed_same_fire_pattern():
+    def pattern(seed):
+        plan = FP.FaultPlan.from_text("serve.batch=0.3", seed=seed)
+        return [plan.should_fire("serve.batch") is not None
+                for _ in range(64)]
+    assert pattern(42) == pattern(42)
+    assert pattern(42) != pattern(43)
+    assert any(pattern(42)) and not all(pattern(42))
+
+
+def test_per_site_streams_are_independent():
+    """Draw traffic on one site must not shift another site's pattern."""
+    a = FP.FaultPlan.from_text(
+        "serve.batch=0.3,pyramid.launch=0.3", seed=5)
+    b = FP.FaultPlan.from_text(
+        "serve.batch=0.3,pyramid.launch=0.3", seed=5)
+    for _ in range(100):                       # extra traffic on one site
+        b.should_fire("pyramid.launch")
+    pa = [a.should_fire("serve.batch") is not None for _ in range(32)]
+    pb = [b.should_fire("serve.batch") is not None for _ in range(32)]
+    assert pa == pb
+
+
+def test_once_fires_exactly_once_and_kind_filter_guards_draws():
+    plan = FP.FaultPlan.from_text("serve.batch=once", seed=0)
+    # a call-kind hook never consumes a corrupt spec's trigger & v.v.
+    assert plan.should_fire("serve.batch", kinds=("corrupt",)) is None
+    assert plan.should_fire("serve.batch") is not None
+    assert plan.should_fire("serve.batch") is None
+    assert plan.stats()["sites"]["serve.batch"]["fired"] == 1
+
+
+# -- injection hooks --------------------------------------------------
+
+def test_inactive_plane_is_a_noop_and_env_reload(monkeypatch):
+    assert FJ.active() is None
+    FJ.maybe_inject("serve.batch")             # no plan -> returns
+    assert FJ.corrupt_output("serve.batch", 1.0) == 1.0
+    monkeypatch.setenv(FP.FAULTS_ENV, "serve.batch=always")
+    monkeypatch.setenv(FP.SEED_ENV, "9")
+    plan = FJ.reload()
+    assert plan is not None and plan.seed == 9
+    with pytest.raises(FJ.InjectedFault) as ei:
+        FJ.maybe_inject("serve.batch", op="forward")
+    assert ei.value.site == "serve.batch" and ei.value.kind == "raise"
+    monkeypatch.delenv(FP.FAULTS_ENV)
+    assert FJ.reload() is None
+
+
+def test_slow_fault_returns_and_is_counted():
+    FJ.activate(FP.FaultPlan.from_text("serve.batch=slow:always:0.001"))
+    before = FJ.INJECTIONS.value(site="serve.batch", kind="slow")
+    FJ.maybe_inject("serve.batch")             # must NOT raise
+    assert FJ.INJECTIONS.value(site="serve.batch", kind="slow") \
+        == before + 1
+
+
+def test_corrupt_output_nan_poisons_arrays_and_pytrees():
+    FJ.activate(FP.FaultPlan.from_text("execute.forward=corrupt:always"))
+    arr = np.ones((4, 4), np.float32)
+    out = FJ.corrupt_output("execute.forward", arr)
+    assert np.isnan(out).any() and not np.isnan(arr).any()  # copy, not view
+    ll, det = FJ.corrupt_output(
+        "execute.forward",
+        (np.ones((2, 2), np.float32), (np.ones(3, np.float32),)))
+    assert np.isnan(ll).any()
+
+
+# -- retry / deadline -------------------------------------------------
+
+def test_retry_call_recovers_then_reraises_last_error():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError(f"boom {len(calls)}")
+        return "ok"
+    assert retry_call(flaky, site="execute.forward", retries=2,
+                      backoff_s=0.0) == "ok"
+    calls.clear()
+    with pytest.raises(RuntimeError, match="boom 2"):   # last, not first
+        retry_call(flaky, site="execute.forward", retries=1, backoff_s=0.0)
+
+
+def test_retry_call_never_swallows_deadline():
+    clock = FakeClock()
+    d = Deadline(1.0, clock=clock)
+    clock.t = 2.0
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return "ok"
+    with pytest.raises(DeadlineExceeded):
+        retry_call(fn, site="serve.batch", retries=5, deadline=d)
+    assert calls == []                          # expired before the call
+
+    def raises_deadline():
+        raise DeadlineExceeded("inner budget blown")
+    with pytest.raises(DeadlineExceeded):
+        retry_call(raises_deadline, site="serve.batch", retries=5,
+                   backoff_s=0.0)
+
+
+# -- circuit breaker --------------------------------------------------
+
+def test_breaker_full_state_machine():
+    clock = FakeClock()
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=10.0, clock=clock)
+    assert br.state == "closed" and br.allow()
+    br.record(ok=False)
+    br.record(ok=True)                 # success resets the streak
+    br.record(ok=False)
+    assert br.state == "closed"
+    br.record(ok=False)                # 2 consecutive -> open
+    assert br.state == "open" and not br.allow()
+    clock.t = 10.0                     # cooldown over -> half-open
+    assert br.state == "half-open"
+    assert br.allow()                  # claims THE probe slot
+    assert not br.allow()              # second caller refused
+    br.record(ok=False)                # failed probe -> re-open + restart
+    assert br.state == "open" and not br.allow()
+    clock.t = 15.0                     # cooldown restarted at t=10
+    assert br.state == "open"
+    clock.t = 20.0
+    assert br.allow()
+    br.record(ok=True)                 # successful probe -> closed
+    assert br.state == "closed" and br.allow()
+
+
+# -- degradation chain ------------------------------------------------
+
+def test_degradation_chain_capability_checked():
+    from repro.engine.plan import PlanKey
+    from repro.faults.degrade import degradation_chain
+
+    k = PlanKey("cdf97", "ns-polyconv", 2, (64, 64), "float32",
+                "pallas", False, "pyramid", "periodic")
+    chain = [(c.backend, c.fuse) for c in degradation_chain(k)]
+    # fuse demotions first, then weaker backends at demoted fuses only;
+    # xla never appears with "pyramid" (it has no fused-pyramid path)
+    assert chain == [("pallas", "levels"), ("pallas", "none"),
+                     ("xla", "levels"), ("jnp", "levels")]
+    assert ("xla", "pyramid") not in chain
+    # the reference path has nowhere further to degrade
+    ref = PlanKey("cdf97", "ns-polyconv", 2, (64, 64), "float32",
+                  "jnp", False, "none", "periodic")
+    assert degradation_chain(ref) == []

@@ -388,3 +388,26 @@ def test_stats_surfaces_auto_and_block_table():
                                  "predictions", "store_hits"]
     assert "device_fallbacks" in s["block_table"]
     assert any(r["backend"] == "auto" for r in s["backends"])
+
+
+# ---------------------------------------------------------------------------
+# store durability: choose() over a torn/garbage tail (PR 9)
+# ---------------------------------------------------------------------------
+
+def test_choose_survives_truncated_store_tail(store):
+    from repro.profiler.store import CORRUPT_RECORDS
+    key = _key()
+    store.extend([_rec(key, "jnp", "levels", 3e-3),
+                  _rec(key, "xla", "levels", 1e-3)])
+    # a kill mid-append leaves a torn half-record; a bad hand-merge
+    # leaves garbage — neither may poison selection
+    with open(store.path, "a") as f:
+        f.write('{"v": 1, "backend": "pallas", "time_s": 1e-9, "tr\n')
+        f.write("not json at all\n")
+    before = sum(s["value"] for s in CORRUPT_RECORDS.series())
+    reread = PF.TraceStore(store.path)
+    assert len(reread.records()) == 2      # valid prefix only
+    choice = PF.choose(key, store=reread)
+    assert choice.source == "store"
+    assert (choice.backend, choice.fuse) == ("xla", "levels")
+    assert sum(s["value"] for s in CORRUPT_RECORDS.series()) == before + 2

@@ -381,3 +381,150 @@ def test_serve_config_validation():
         ServeConfig(max_batch=0)
     with pytest.raises(RuntimeError, match="not running"):
         asyncio.run(DwtServer().submit(np.zeros((8, 8), np.float32)))
+
+
+# -- resilience: deadlines, breaker, quarantine, worker exceptions ----
+# (the fault plane + recovery policies themselves are unit-tested in
+# tests/test_faults.py; these pin the serve-layer contracts)
+
+def test_worker_exception_after_execution_fails_not_hangs(monkeypatch):
+    """Regression: an exception raised *between* batch execution and
+    future resolution (here: a metrics hook blowing up) used to leave
+    the batch's futures pending forever — the worker coroutine died
+    with the batch already popped from ``_in_flight``, so nobody ever
+    failed the requests.  They must now fail promptly with the real
+    exception, and the pool must heal for the next request."""
+    from repro.serve import scheduler as SCH
+    real = SCH.METRICS.batch_done
+    armed = {"on": True}
+
+    def exploding(*a, **kw):
+        if armed["on"]:
+            armed["on"] = False
+            raise RuntimeError("metrics hook exploded")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(SCH.METRICS, "batch_done", exploding)
+    imgs = _images(2)
+    kw = dict(levels=1, backend="jnp", fuse="none")
+
+    async def run():
+        cfg = ServeConfig(max_batch=4, max_wait_ms=1.0,
+                          request_deadline_ms=3000.0)
+        async with DwtServer(cfg) as srv:
+            with pytest.raises(RuntimeError, match="metrics hook"):
+                await srv.submit(imgs[0], **kw)
+            return await srv.submit(imgs[1], **kw)
+
+    out = asyncio.run(run())     # a hang would surface as the deadline
+    assert _pyr_equal(out, dwt2(imgs[1], **kw))
+    assert serve_stats()["deadline_exceeded"] == 0
+
+
+def test_request_deadline_cuts_hung_batch():
+    from repro.faults import inject as FJ
+    from repro.faults import plan as FP
+    from repro.faults.policy import DeadlineExceeded
+    FJ.activate(FP.FaultPlan.from_text("serve.batch=hang:always:0.6"))
+    try:
+        async def run():
+            cfg = ServeConfig(max_wait_ms=1.0, request_deadline_ms=150.0)
+            async with DwtServer(cfg) as srv:
+                with pytest.raises(DeadlineExceeded, match="150 ms"):
+                    await srv.submit(_images(1)[0], levels=1,
+                                     backend="jnp", fuse="none")
+        asyncio.run(run())
+    finally:
+        FJ.activate(None)
+    assert serve_stats()["deadline_exceeded"] == 1
+
+
+def test_circuit_breaker_opens_per_bucket():
+    from repro.faults import inject as FJ
+    from repro.faults import plan as FP
+    from repro.faults.policy import CircuitOpenError
+    FJ.activate(FP.FaultPlan.from_text("serve.batch=always"))
+    try:
+        async def run():
+            cfg = ServeConfig(max_batch=1, max_wait_ms=0.5,
+                              breaker_threshold=2, breaker_cooldown_s=60.0)
+            kw = dict(levels=1, backend="jnp", fuse="none")
+            img = _images(1)[0]
+            async with DwtServer(cfg) as srv:
+                for _ in range(2):
+                    with pytest.raises(FJ.InjectedFault):
+                        await srv.submit(img, **kw)
+                with pytest.raises(CircuitOpenError, match="circuit open"):
+                    await srv.submit(img, **kw)
+        asyncio.run(run())
+    finally:
+        FJ.activate(None)
+    assert serve_stats()["breaker_rejections"] >= 1
+
+
+def test_poison_batch_quarantine_isolates_requests():
+    """A batch that has already killed a worker (attempts >= 1) kills
+    another: survivors within budget re-dispatch as singleton batches
+    (so one poisoned request can't keep cascading onto batch-mates) and
+    over-budget requests drop with WorkerDied."""
+    from repro.distributed.fault_tolerance import (FaultToleranceConfig,
+                                                   HeartbeatTracker)
+    from repro.serve import bucket as BK
+
+    async def run():
+        loop = asyncio.get_running_loop()
+        srv = DwtServer(ServeConfig())          # not started: no live
+        srv._loop = loop                        # workers to steal the
+        srv._batch_q = asyncio.Queue()          # re-queued batches
+        srv.tracker = HeartbeatTracker(
+            [], FaultToleranceConfig(soft_timeout_s=1.0,
+                                     hard_timeout_s=2.0,
+                                     quorum_fraction=0.5),
+            clock=lambda: 0.0)
+        srv.tracker.register("w0")
+        key = BK.BucketKey(op="dwt2", h=32, w=32, dtype="float32",
+                           wavelet="cdf97", scheme="ns-polyconv",
+                           levels=1, backend="jnp", optimize=False,
+                           fuse="none", boundary="periodic",
+                           compute_dtype="float32", tap_opt="full")
+        reqs = [BK.Request(payload=i, future=loop.create_future(),
+                           t=0.0, attempts=a)
+                for i, a in enumerate([1, 1, 2])]
+        srv._in_flight["w0"] = (key, reqs)
+        srv._on_worker_death("w0", "poison test")
+        # attempts 2 -> 3 exceeds max_redispatch=2: dropped, not queued
+        assert isinstance(reqs[2].future.exception(), WorkerDied)
+        batches = [srv._batch_q.get_nowait()
+                   for _ in range(srv._batch_q.qsize())]
+        assert [len(rs) for _, rs in batches] == [1, 1]   # singletons
+        assert all(k == key for k, _ in batches)
+
+    asyncio.run(run())
+    assert serve_stats()["quarantined"] == 2
+
+
+def test_serve_validate_nan_rejects_at_submit():
+    from repro.engine.pyramid import Pyramid
+    img = _images(1)[0]
+    bad = img.copy()
+    bad[0, 0] = np.nan
+    kw = dict(levels=1, backend="jnp", fuse="none")
+
+    async def run():
+        cfg = ServeConfig(validate="nan", max_wait_ms=1.0)
+        async with DwtServer(cfg) as srv:
+            with pytest.raises(ValueError, match="non-finite"):
+                await srv.submit(bad, **kw)
+            pyr = await srv.submit(img, **kw)   # clean input still flows
+            bad_ll = np.asarray(pyr.ll).copy()
+            bad_ll[0, 0] = np.inf
+            with pytest.raises(ValueError, match="non-finite"):
+                await srv.submit_inverse(
+                    Pyramid(ll=bad_ll, details=pyr.details),
+                    backend="jnp", fuse="none")
+            return pyr
+
+    out = asyncio.run(run())
+    assert _pyr_equal(out, dwt2(img, **kw))
+    with pytest.raises(ValueError, match="validate"):
+        ServeConfig(validate="bogus")

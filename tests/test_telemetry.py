@@ -310,15 +310,19 @@ def test_attribution_handles_tap_opt_off_and_bad_measurements():
 
 def test_engine_stats_schema_exact_top_level_keys():
     s = engine.stats()
-    assert sorted(s) == ["auto", "backends", "block_table", "plan_cache",
-                         "plans", "pyramid", "serve", "telemetry"]
+    assert sorted(s) == ["auto", "backends", "block_table", "faults",
+                         "plan_cache", "plans", "pyramid", "serve",
+                         "telemetry"]
     assert sorted(s["pyramid"]) == ["pyramid_kernel_launches",
                                     "vmem_fallbacks"]
     assert sorted(s["auto"]) == ["choices", "cold_fallbacks",
                                  "predictions", "store_hits"]
     assert {"submitted", "served", "failed", "rejected", "batches",
             "p50_ms", "p99_ms", "img_per_s", "mean_occupancy",
-            "latency_samples", "latency_dropped"} <= set(s["serve"])
+            "latency_samples", "latency_dropped", "deadline_exceeded",
+            "quarantined", "breaker_rejections"} <= set(s["serve"])
+    assert {"active", "enabled", "injections", "fallbacks",
+            "retries"} <= set(s["faults"])
     assert sorted(s["telemetry"]) == ["dropped_series", "metrics",
                                       "mode", "series", "spans"]
     assert {"hits", "misses", "size", "maxsize"} <= set(s["plan_cache"])
@@ -333,11 +337,14 @@ def test_engine_stats_sections_degrade_to_zero_schema(monkeypatch):
         raise RuntimeError("serve backend unavailable")
     monkeypatch.setattr("repro.serve.metrics.serve_stats", boom)
     monkeypatch.setattr("repro.profiler.auto.auto_stats", boom)
+    monkeypatch.setattr("repro.faults.stats", boom)
     s = engine.stats()
     assert s["serve"] == EC._SERVE_ZERO
     assert s["auto"] == EC._AUTO_ZERO
-    assert sorted(s) == ["auto", "backends", "block_table", "plan_cache",
-                         "plans", "pyramid", "serve", "telemetry"]
+    assert s["faults"] == EC._FAULTS_ZERO
+    assert sorted(s) == ["auto", "backends", "block_table", "faults",
+                         "plan_cache", "plans", "pyramid", "serve",
+                         "telemetry"]
 
 
 def test_serve_latency_window_bounded_and_drops_counted(monkeypatch):
