@@ -15,7 +15,7 @@ unset) and once with the plane's hooks stubbed to bare calls — and
 fails when the median inflation exceeds the gate (default 1%).
 
 Compares the throughput story of a fresh bench run against a committed
-baseline (``BENCH_8.json``) and exits non-zero when anything regressed
+baseline (``BENCH_10.json``) and exits non-zero when anything regressed
 by more than ``--gate`` (default 15%).
 
 Two comparison modes, because the baseline and the new run usually come
@@ -62,6 +62,13 @@ def throughput_metrics(doc: dict) -> dict:
         m[f"engine/{r['backend']}/batch{r['batch']}"] = r["engine_img_per_s"]
     for r in doc.get("tiling", []) or []:
         m[f"tiling/{r['path']}"] = r["img_per_s"]
+    # packet / 3-D sections (PR 10): absent from older baselines, in
+    # which case the shared-keys intersection below skips them — new
+    # sections are additive, never a false regression vs BENCH_8-era docs
+    for r in doc.get("packets", {}).get("rows", []):
+        m[f"packets/{r['packet']}"] = r["img_per_s"]
+    for r in doc.get("dwt3", {}).get("rows", []):
+        m[f"dwt3/{r['backend']}"] = r["vol_per_s"]
     for r in doc.get("pyramid", {}).get("rows", []):
         m[f"pyramid/fuse={r['fuse']}"] = r["img_per_s"]
     srv = doc.get("serve", {})

@@ -16,10 +16,10 @@ Sections:
   5. auto     — profile-guided selection: warm the trace store on a
                 small grid, assert ``backend="auto"`` picks within 10%
                 of the best manual (backend, fuse) per cell, report
-                cost-model prediction error (a BENCH_8 CI gate).
+                cost-model prediction error (a BENCH_10 CI gate).
   6. serve    — serving runtime: batched DwtServer vs per-request
                 dispatch at concurrency 16; gates speedup >= 2x and
-                bit-identical coefficients (a BENCH_8 CI gate).
+                bit-identical coefficients (a BENCH_10 CI gate).
   7. compress — DWT gradient compression (framework integration).
   8. roofline — per-(arch x shape x mesh) summary from the dry-run
                 artifacts (if present).
@@ -34,9 +34,9 @@ snapshot accumulated over the run plus the top-spans table
 (``repro.telemetry.span_summary``) when span tracing was on.
 ``benchmarks/compare_bench.py`` diffs two such documents and gates
 throughput regressions against the committed baseline
-(``BENCH_8.json``):
+(``BENCH_10.json``):
 
-    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_8.json
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_10.json
 
 ``--trace PATH`` forces ``REPRO_TELEMETRY=spans`` for the run and
 writes the Chrome-trace JSON of the span ring to PATH — load it at
@@ -106,6 +106,16 @@ def main() -> None:
     print("=" * 72)
     doc["tiling"] = throughput.tiled_throughput(
         n=256 if quick else 512, tile=64 if quick else 128)
+
+    print("=" * 72)
+    doc["packets"] = throughput.packet_throughput(
+        n=64 if quick else 128, reps=3 if quick else 5)
+
+    print("=" * 72)
+    doc["dwt3"] = throughput.dwt3_throughput(
+        n=32 if quick else 64, t_frames=4 if quick else 8,
+        reps=3 if quick else 5,
+        backends=tuple(b for b in ("jnp", "xla") if b in backends))
 
     if "pallas" in backends:
         print("=" * 72)

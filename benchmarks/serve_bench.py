@@ -18,7 +18,7 @@ dispatch overhead dominates compute and batching pays most; see
 docs/performance.md for the occupancy/latency tradeoff at other sizes.
 
 CI runs ``--quick`` and enforces ``speedup >= 2.0`` on the jnp backend
-(the BENCH_8.json ``serve`` section); two attempts damp scheduler
+(the BENCH_10.json ``serve`` section); two attempts damp scheduler
 jitter on shared runners.
 """
 import asyncio

@@ -199,6 +199,65 @@ def pyramid_throughput(n: int = 64, levels: int = 2, batch: int = 4,
     return {"rows": rows, "counters": counters}
 
 
+def packet_throughput(n: int = 128, depth: int = 2, batch: int = 4,
+                      wavelet: str = "cdf97", scheme: str = "ns-polyconv",
+                      reps: int = 3):
+    """Wavelet-packet workloads through the plan cache: the plain
+    pyramid re-expressed as a packet tree (same work as ``dwt2`` — the
+    packet executor's overhead must be noise), the full depth-D tree
+    (4^D leaves: the worst-case node count), and a best-basis tree
+    chosen on the first image.  img/s is per batch image, forward
+    transform only."""
+    print(f"# packets: batch={batch}, {n}x{n}, depth {depth} "
+          f"({wavelet}/{scheme}, fuse='levels')")
+    print("packet,leaves,img_per_s")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, n, n)), jnp.float32)
+    bb = T.best_basis(x[0], wavelet=wavelet, depth=depth, scheme=scheme)
+    rows = []
+    for label, spec in ((f"dwt:{depth}", f"dwt:{depth}"),
+                        (f"full:{depth}", f"full:{depth}"),
+                        ("best-basis", bb)):
+        t = _time(lambda: T.wpt2(x, wavelet=wavelet, packet=spec,
+                                 scheme=scheme, fuse="levels"), reps)
+        leaves = len(T.wpt2(x[:1], wavelet=wavelet, packet=spec,
+                            scheme=scheme).paths)
+        rows.append({"packet": label, "leaves": leaves,
+                     "img_per_s": batch / t})
+        print(f"{label},{leaves},{batch / t:.1f}")
+    return {"rows": rows, "best_basis_leaves": list(bb.leaves)}
+
+
+def dwt3_throughput(n: int = 64, t_frames: int = 8, levels: int = 2,
+                    batch: int = 2, wavelet: str = "cdf97",
+                    scheme: str = "ns-polyconv", reps: int = 3,
+                    backends=("jnp", "xla")):
+    """3-D (t+2D) volumes through the plan cache versus the
+    frame-by-frame 2-D baseline (what a caller without 3-D support
+    would run: ``dwt2`` on every frame, no temporal decorrelation).
+    vol/s counts whole (T, H, W) volumes."""
+    print(f"# dwt3: batch={batch}, T={t_frames}, {n}x{n}, "
+          f"{levels} levels ({wavelet}/{scheme}, fuse='levels')")
+    print("backend,vol_per_s,frames2d_vol_per_s,ratio")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, t_frames, n, n)),
+                    jnp.float32)
+    rows = []
+    for bk in backends:
+        t3 = _time(lambda: T.dwt3(x, wavelet=wavelet, levels=levels,
+                                  scheme=scheme, backend=bk,
+                                  fuse="levels"), reps)
+        # per-frame 2-D baseline: T frames ride the leading batch dims,
+        # so this is the same conv work minus the temporal lifting
+        t2 = _time(lambda: T.dwt2(x, wavelet=wavelet, levels=levels,
+                                  scheme=scheme, backend=bk,
+                                  fuse="levels"), reps)
+        rows.append({"backend": bk, "vol_per_s": batch / t3,
+                     "frames2d_vol_per_s": batch / t2})
+        print(f"{bk},{batch / t3:.1f},{batch / t2:.1f},{t2 / t3:.2f}x")
+    return {"rows": rows}
+
+
 def main(sizes=(512, 1024, 2048), wavelets=("cdf53", "cdf97", "dd137")):
     print("# Figures 7/8/9 analogue: GB/s per scheme vs image size")
     print("wavelet,scheme,size,cpu_measured_GBps,tpu_model_GBps,"

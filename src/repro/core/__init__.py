@@ -3,7 +3,10 @@ from repro.core.wavelets import WAVELETS, get_wavelet, CDF53, CDF97, DD137
 from repro.core.schemes import (SCHEMES, build_scheme, build_inverse_scheme,
                                 forward, inverse, to_planes, from_planes)
 from repro.core.optimize import build_optimized, forward_optimized, table1_ops
-from repro.core.transform import (dwt2, idwt2, Pyramid, flatten_pyramid,
+from repro.core.packets import PacketTree
+from repro.core.transform import (dwt2, idwt2, dwt3, idwt3, wpt2, iwpt2,
+                                  best_basis, Pyramid, Pyramid3,
+                                  WaveletPacket2D, flatten_pyramid,
                                   unflatten_pyramid)
 
 __all__ = [
@@ -11,5 +14,7 @@ __all__ = [
     "SCHEMES", "build_scheme", "build_inverse_scheme", "forward", "inverse",
     "to_planes", "from_planes",
     "build_optimized", "forward_optimized", "table1_ops",
-    "dwt2", "idwt2", "Pyramid", "flatten_pyramid", "unflatten_pyramid",
+    "dwt2", "idwt2", "dwt3", "idwt3", "wpt2", "iwpt2", "best_basis",
+    "PacketTree", "Pyramid", "Pyramid3", "WaveletPacket2D",
+    "flatten_pyramid", "unflatten_pyramid",
 ]

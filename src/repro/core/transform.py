@@ -70,10 +70,13 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.engine.pyramid import Detail, Pyramid  # re-exported for compat
+from repro.engine.pyramid import (Detail, Pyramid,  # re-exported for compat
+                                  Pyramid3, WaveletPacket2D)
 
-__all__ = ["Pyramid", "dwt2", "idwt2", "flatten_pyramid",
-           "unflatten_pyramid", "validate_finite", "VALIDATE_MODES"]
+__all__ = ["Pyramid", "Pyramid3", "WaveletPacket2D", "dwt2", "idwt2",
+           "dwt3", "idwt3", "wpt2", "iwpt2", "best_basis",
+           "flatten_pyramid", "unflatten_pyramid", "validate_finite",
+           "VALIDATE_MODES"]
 
 #: accepted values of the ``validate`` parameter (None = no checking)
 VALIDATE_MODES = (None, "nan")
@@ -102,6 +105,18 @@ def validate_finite(x, mode, what: str = "input") -> None:
                 validate_finite(d, mode,
                                 what=f"{what} ({band} plane, level {lvl})")
         return
+    if isinstance(x, Pyramid3):
+        validate_finite(x.ll, mode, what=f"{what} (tLLL volume)")
+        for lvl, dd in enumerate(x.details):
+            for band, d in enumerate(dd):
+                validate_finite(d, mode,
+                                what=f"{what} (subband {band}, "
+                                     f"level {lvl})")
+        return
+    if isinstance(x, WaveletPacket2D):
+        for path, leaf in x.items():
+            validate_finite(leaf, mode, what=f"{what} (leaf {path!r})")
+        return
     arr = np.asarray(x)
     if not np.isfinite(arr).all():
         bad = int(arr.size - np.isfinite(arr).sum())
@@ -112,13 +127,14 @@ def validate_finite(x, mode, what: str = "input") -> None:
 
 
 def _plan_for(shape, dtype, wavelet, levels, scheme, optimize, backend,
-              fuse, boundary, compute_dtype, tap_opt, tiles=None):
+              fuse, boundary, compute_dtype, tap_opt, tiles=None,
+              packet=None, ndim=2):
     from repro import engine as E  # deferred: core <-> engine import cycle
     return E.get_plan(wavelet=wavelet, scheme=scheme, levels=levels,
                       shape=tuple(shape), dtype=str(dtype), backend=backend,
                       optimize=optimize, fuse=fuse, boundary=boundary,
                       compute_dtype=compute_dtype, tap_opt=tap_opt,
-                      tiles=tiles)
+                      tiles=tiles, packet=packet, ndim=ndim)
 
 
 def dwt2(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
@@ -194,6 +210,172 @@ def idwt2(pyr: Pyramid, wavelet: str = "cdf97",
     shape = ll.shape[:-2] + (ll.shape[-2] << levels, ll.shape[-1] << levels)
     plan = _plan_for(shape, ll.dtype, wavelet, levels, scheme, optimize,
                      backend, fuse, boundary, compute_dtype, tap_opt, tiles)
+    return plan.execute_inverse(pyr)
+
+
+def wpt2(x: jax.Array, wavelet: str = "cdf97", packet="full:2",
+         scheme: str = "ns-polyconv", optimize: bool = False,
+         backend: str = "jnp", fuse: str = "none",
+         boundary: str = "periodic", compute_dtype: str = "float32",
+         tap_opt: str = "full", validate=None) -> WaveletPacket2D:
+    """2-D wavelet **packet** transform of a (batch of) image(s).
+
+    Where :func:`dwt2` recurses into the LL subband only, a packet
+    transform may split any node of the subband quad-tree.  ``packet``
+    names the decomposition: ``"full:D"`` (the complete depth-D tree),
+    ``"dwt:L"`` (the plain pyramid, as a packet tree), an iterable of
+    leaf paths over the child alphabet ``a/h/v/d`` (a=LL, h=HL, v=LH,
+    d=HH), or a :class:`repro.core.packets.PacketTree` — e.g. one
+    pruned by :func:`best_basis`.  H and W must be divisible by
+    ``2**depth``.  Every admissible leaf set reconstructs exactly via
+    :func:`iwpt2`; plans are cached on the canonical leaf tuple, so
+    equivalent spellings of one tree share a plan.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import wpt2, iwpt2
+    >>> img = jnp.arange(256.0).reshape(16, 16)
+    >>> pk = wpt2(img, wavelet="cdf53", packet="full:2")
+    >>> len(pk.paths), pk.leaves[0].shape     # 16 leaves, 4x4 each
+    (16, (4, 4))
+    >>> pk.paths[:4]
+    ('aa', 'ah', 'av', 'ad')
+    >>> pk2 = wpt2(img, wavelet="cdf53",      # mixed-depth leaf set
+    ...            packet=("aa", "ah", "av", "ad", "h", "v", "d"))
+    >>> rec = iwpt2(pk2, wavelet="cdf53")
+    >>> bool(jnp.allclose(rec, img, atol=1e-3))
+    True
+    """
+    x = jnp.asarray(x)
+    validate_finite(x, validate, what="wpt2 input")
+    plan = _plan_for(x.shape, x.dtype, wavelet, 1, scheme, optimize,
+                     backend, fuse, boundary, compute_dtype, tap_opt,
+                     packet=packet)
+    return plan.execute(x)
+
+
+def iwpt2(pk: WaveletPacket2D, wavelet: str = "cdf97",
+          scheme: str = "ns-polyconv", optimize: bool = False,
+          backend: str = "jnp", fuse: str = "none",
+          boundary: str = "periodic", compute_dtype: str = "float32",
+          tap_opt: str = "full", validate=None) -> jax.Array:
+    """Inverse of :func:`wpt2`: exact reconstruction from any
+    admissible leaf set (the packet tree is read off ``pk.paths``)."""
+    validate_finite(pk, validate, what="iwpt2 input packet")
+    first = jnp.asarray(pk.leaves[0])
+    d = len(pk.paths[0])
+    shape = first.shape[:-2] + (first.shape[-2] << d,
+                                first.shape[-1] << d)
+    plan = _plan_for(shape, first.dtype, wavelet, 1, scheme, optimize,
+                     backend, fuse, boundary, compute_dtype, tap_opt,
+                     packet=tuple(pk.paths))
+    return plan.execute_inverse(pk)
+
+
+def best_basis(x: jax.Array, wavelet: str = "cdf97", depth: int = 2,
+               cost: str = "shannon", scheme: str = "ns-polyconv",
+               optimize: bool = False, backend: str = "jnp",
+               fuse: str = "none", boundary: str = "periodic",
+               compute_dtype: str = "float32", tap_opt: str = "full"):
+    """Entropy-pruned packet tree for ``x`` (Coifman–Wickerhauser).
+
+    Decomposes the full quad-tree to ``depth``, scores every node with
+    the additive ``cost`` functional (``"shannon"``, ``"l1"`` or
+    ``"threshold"``; see :mod:`repro.core.packets`) and keeps a node
+    whole when splitting does not pay.  The returned
+    :class:`~repro.core.packets.PacketTree` feeds straight into
+    :func:`wpt2`'s ``packet`` argument.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import best_basis, wpt2
+    >>> smooth = jnp.ones((16, 16))           # nothing to split for
+    >>> tree = best_basis(smooth, wavelet="cdf53", depth=2)
+    >>> tree.leaves                           # root split only
+    ('a', 'h', 'v', 'd')
+    >>> pk = wpt2(smooth, wavelet="cdf53", packet=tree)
+    >>> len(pk.leaves)
+    4
+    """
+    from repro.core import packets as PK
+    import numpy as np
+    if cost not in PK.COSTS:
+        raise ValueError(f"unknown cost {cost!r}; "
+                         f"available: {sorted(PK.COSTS)}")
+    cost_fn = PK.COSTS[cost]
+    x = jnp.asarray(x)
+    costs = {}
+
+    def walk(img, path):
+        costs[path] = cost_fn(np.asarray(img))
+        if len(path) == depth:
+            return
+        pyr = dwt2(img, wavelet=wavelet, levels=1, scheme=scheme,
+                   optimize=optimize, backend=backend, fuse=fuse,
+                   boundary=boundary, compute_dtype=compute_dtype,
+                   tap_opt=tap_opt)
+        hl, lh, hh = pyr.details[0]
+        for c, arr in zip(PK.CHILDREN, (pyr.ll, hl, lh, hh)):
+            walk(arr, path + c)
+
+    walk(x, "")
+    return PK.best_basis_from_costs(costs, depth)
+
+
+def dwt3(x: jax.Array, wavelet: str = "cdf97", levels: int = 1,
+         scheme: str = "ns-polyconv", optimize: bool = False,
+         backend: str = "jnp", fuse: str = "none",
+         boundary: str = "periodic", compute_dtype: str = "float32",
+         tap_opt: str = "full", validate=None) -> Pyramid3:
+    """Multi-level 3-D (t+2D) DWT of a (batch of) volume(s)
+    ``(..., T, H, W)``.
+
+    Each level lifts along the temporal axis (1-D periodic lifting of
+    the wavelet's predict/update pairs, compiled once per wavelet —
+    :mod:`repro.compiler.temporal`) and transforms both temporal
+    half-bands with the compiled 2-D level of the chosen backend (the
+    T/2 frames ride the free leading batch dims); only the tL·LL
+    subband recurses.  T, H and W must each be divisible by
+    ``2**levels``.  On the jnp and xla backends ``fuse="levels"`` fuses
+    the t+2D chain into one trace; pallas keeps the temporal pass
+    unfused (capability-checked fallback, recorded on
+    ``plan.fallback``).  ``fuse="pyramid"`` demotes to ``"levels"`` —
+    the megakernel is 2-D-pyramid-only.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dwt3, idwt3
+    >>> vid = jnp.ones((8, 16, 16))           # T=8 frames of 16x16
+    >>> p3 = dwt3(vid, wavelet="cdf53", levels=2)
+    >>> p3.levels, p3.ll.shape                # coarsest tLLL volume
+    (2, (2, 4, 4))
+    >>> [d[0].shape for d in p3.details]      # 7 subbands/level
+    [(2, 4, 4), (4, 8, 8)]
+    >>> rec = idwt3(p3, wavelet="cdf53")
+    >>> bool(jnp.allclose(rec, vid, atol=1e-4))
+    True
+    """
+    x = jnp.asarray(x)
+    validate_finite(x, validate, what="dwt3 input")
+    plan = _plan_for(x.shape, x.dtype, wavelet, levels, scheme, optimize,
+                     backend, fuse, boundary, compute_dtype, tap_opt,
+                     ndim=3)
+    return plan.execute(x)
+
+
+def idwt3(pyr: Pyramid3, wavelet: str = "cdf97",
+          scheme: str = "ns-polyconv", optimize: bool = False,
+          backend: str = "jnp", fuse: str = "none",
+          boundary: str = "periodic", compute_dtype: str = "float32",
+          tap_opt: str = "full", validate=None) -> jax.Array:
+    """Inverse of :func:`dwt3` (pass the same ``wavelet`` / ``scheme``
+    / backend arguments as the forward call)."""
+    validate_finite(pyr, validate, what="idwt3 input pyramid")
+    ll = jnp.asarray(pyr.ll)
+    levels = pyr.levels
+    shape = ll.shape[:-3] + (ll.shape[-3] << levels,
+                             ll.shape[-2] << levels,
+                             ll.shape[-1] << levels)
+    plan = _plan_for(shape, ll.dtype, wavelet, levels, scheme, optimize,
+                     backend, fuse, boundary, compute_dtype, tap_opt,
+                     ndim=3)
     return plan.execute_inverse(pyr)
 
 

@@ -92,6 +92,16 @@ class Backend:
     #: wrap each level's dispatch in its own jax.jit under
     #: fuse="none"/"scheme" (kernel backends want this; jnp stays eager)
     jit_per_level: bool = False
+    #: whether packet plans (PlanKey.packet) may run through this backend
+    supports_packets: bool = True
+    #: whether 3-D (t+2D) plans (PlanKey.ndim == 3) may run through it
+    supports_3d: bool = True
+    #: True when the t+2D level (temporal lifting + both 2-D half-band
+    #: transforms) fuses into one trace under fuse="levels"; False keeps
+    #: the temporal pass unfused (the pallas capability fallback: its
+    #: window kernels dispatch per level, the jnp temporal pass runs
+    #: between them)
+    temporal_fuse: bool = True
 
     # -- plan-build hooks --------------------------------------------------
 
@@ -114,6 +124,24 @@ class Backend:
             raise BackendError(
                 f"backend {self.name!r} does not support tiled plans "
                 f"(PlanKey.tiles={key.tiles!r})")
+        packet = getattr(key, "packet", None)
+        ndim = getattr(key, "ndim", 2)
+        if packet is not None and not self.supports_packets:
+            raise BackendError(
+                f"backend {self.name!r} does not support wavelet-packet "
+                f"plans (PlanKey.packet={packet!r})")
+        if ndim == 3 and not self.supports_3d:
+            raise BackendError(
+                f"backend {self.name!r} does not support 3-D plans "
+                f"(PlanKey.ndim=3)")
+        if (packet is not None or ndim == 3) and key.fuse == "pyramid":
+            # keeps pyramid out of the profiler's candidate set and the
+            # degradation chain for these workloads; build_plan demotes
+            # user-passed fuse="pyramid" before this check runs
+            raise BackendError(
+                f"fuse='pyramid' is the 2-D pyramid megakernel; packet "
+                f"and 3-D plans on {self.name!r} execute at "
+                f"fuse='levels' (build_plan demotes automatically)")
 
     def program_opt(self, key) -> Optional[str]:
         """Tap-program compilation level for this backend, or None when
@@ -248,6 +276,9 @@ class Backend:
                 "compute_dtypes": self.compute_dtypes,
                 "tiles": self.supports_tiles,
                 "pyramid_kernel": self.pyramid_kernel,
+                "packets": self.supports_packets,
+                "supports_3d": self.supports_3d,
+                "temporal_fuse": self.temporal_fuse,
                 "description": self.description}
 
 
@@ -329,6 +360,9 @@ class PallasBackend(Backend):
     description = "TPU Pallas window kernels (interpret=True on CPU)"
     pyramid_kernel = True
     jit_per_level = True
+    # capability-checked 3-D fallback: the window kernels dispatch per
+    # level, so the jnp temporal pass runs unfused between them
+    temporal_fuse = False
 
     def level_forward(self, x, spec, key):
         return X.pallas_level_forward(x, spec, key)

@@ -87,6 +87,7 @@ def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
              fuse: str = "none", boundary: str = "periodic",
              compute_dtype: str = "float32", tap_opt: str = "full",
              tiles: Optional[Tuple[int, int]] = None,
+             packet=None, ndim: int = 2,
              cache: Optional[PlanCache] = None) -> DwtPlan:
     """Fetch (or build) the plan for one transform configuration.
 
@@ -95,6 +96,14 @@ def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
     :class:`~repro.engine.plan.DwtPlan`, building one only on a miss.
     ``cache=None`` uses the process-global LRU; pass an explicit
     :class:`PlanCache` for isolation (tests, autotuning sweeps).
+
+    ``packet`` accepts anything
+    :meth:`repro.core.packets.PacketTree.from_spec` does (a PacketTree,
+    ``"full:D"`` / ``"dwt:L"``, or leaf paths); it is normalized to the
+    canonical leaf tuple — so every admissible spelling of the same
+    tree shares one cached plan — and ``levels`` is overridden by the
+    tree depth.  ``ndim=3`` keys the t+2D volume transform over
+    ``(..., T, H, W)``.
 
     >>> from repro.engine import PlanCache, get_plan
     >>> cache = PlanCache()
@@ -111,14 +120,26 @@ def get_plan(*, wavelet: str = "cdf97", scheme: str = "ns-polyconv",
     True
     >>> cache.stats()["hits"], cache.stats()["misses"]
     (1, 1)
+    >>> pk = get_plan(shape=(64, 64), packet="full:2", cache=cache)
+    >>> pk.key.levels, len(pk.key.packet)     # depth-2 full tree
+    (2, 16)
+    >>> get_plan(shape=(64, 64),              # same tree, spelled out
+    ...          packet=pk.key.packet, cache=cache) is pk
+    True
     """
+    if packet is not None:
+        from repro.core import packets as PK
+        tree = PK.PacketTree.from_spec(packet)
+        packet = tree.leaves
+        levels = tree.depth
     key = PlanKey(wavelet=wavelet, scheme=scheme, levels=int(levels),
                   shape=tuple(int(d) for d in shape), dtype=str(dtype),
                   backend=backend, optimize=bool(optimize), fuse=fuse,
                   boundary=boundary, compute_dtype=str(compute_dtype),
                   tap_opt=tap_opt,
                   tiles=(None if tiles is None
-                         else (int(tiles[0]), int(tiles[1]))))
+                         else (int(tiles[0]), int(tiles[1]))),
+                  packet=packet, ndim=int(ndim))
     # explicit None check: an empty PlanCache is falsy (__len__ == 0)
     return (_GLOBAL if cache is None else cache).get(key)
 
@@ -225,6 +246,11 @@ def stats() -> dict:
             row["pyramid_block"] = plan.pyramid.block
             row["pyramid_window"] = plan.pyramid.window_shape
             row["pyramid_vmem_bytes"] = plan.pyramid.vmem_bytes
+        if key.packet is not None:
+            row["packet_leaves"] = len(key.packet)
+            row["packet_depth"] = key.levels
+        if key.ndim != 2:
+            row["ndim"] = key.ndim
         if plan.fallback is not None:
             row["fallback"] = plan.fallback
         if plan.auto is not None:

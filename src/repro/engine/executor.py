@@ -125,6 +125,122 @@ def xla_level_inverse(planes, spec, key):
 
 
 # ---------------------------------------------------------------------------
+# wavelet packets + 3-D (t+2D): generic executors over the level hooks
+# ---------------------------------------------------------------------------
+#
+# Both workloads compose the per-level hooks every backend already
+# implements (``level_forward`` / ``level_inverse``), so they run on all
+# registered backends with no backend-specific kernel work: a packet
+# node at depth d has exactly the geometry of pyramid level d (the
+# plan's LevelSpecs are reused by depth), and the 3-D transform's
+# temporal half-bands ride the free leading batch dims of the 2-D
+# kernels.  ``fuse="levels"`` traces the whole tree/pyramid once on
+# backends whose capability flags allow it (``temporal_fuse`` gates the
+# fused t+2D trace; pallas keeps the temporal pass unfused).
+
+
+def _fuse_trace(plan, backend, run):
+    """Shared jit policy of the packet/3-D executors: one whole-tree
+    trace under fuse="levels" when the backend allows it, else the
+    eager per-node chain."""
+    if plan.key.fuse == "levels" and backend.temporal_fuse:
+        return jax.jit(run)
+    return run
+
+
+def make_packet_forward(plan, backend):
+    """Forward packet executor: image -> leaf arrays in canonical order
+    (a tuple, so the resilience plane's verification walks it like any
+    other plane list)."""
+    from repro.core import packets as PK
+    key, specs = plan.key, plan.level_specs
+    tree = PK.PacketTree(key.packet)
+    internal, leaves = tree.internal_nodes(), tree.leaves
+
+    def run(x):
+        nodes = {"": x}
+        for path in internal:
+            spec = specs[len(path)]
+            with T.span("packet.forward", depth=len(path),
+                        backend=backend.name):
+                children = backend.level_forward(nodes.pop(path), spec, key)
+            for c, arr in zip(PK.CHILDREN, children):
+                nodes[path + c] = arr
+        return tuple(nodes[p] for p in leaves)
+
+    return _fuse_trace(plan, backend, run)
+
+
+def make_packet_inverse(plan, backend):
+    """Inverse packet executor: canonical leaf tuple -> image, walking
+    the internal nodes bottom-up (exact reconstruction from any
+    admissible leaf set)."""
+    from repro.core import packets as PK
+    key, specs = plan.key, plan.level_specs
+    tree = PK.PacketTree(key.packet)
+    internal, leaves = tree.internal_nodes(), tree.leaves
+
+    def run(leaf_arrays):
+        nodes = dict(zip(leaves, leaf_arrays))
+        for path in reversed(internal):
+            spec = specs[len(path)]
+            children = tuple(nodes.pop(path + c) for c in PK.CHILDREN)
+            with T.span("packet.inverse", depth=len(path),
+                        backend=backend.name):
+                nodes[path] = backend.level_inverse(children, spec, key)
+        return nodes[""]
+
+    return _fuse_trace(plan, backend, run)
+
+
+def make_dwt3_forward(plan, backend):
+    """Forward 3-D executor: volume (..., T, H, W) -> (lll, details
+    coarsest-first).  Each level lifts along time (periodic 1-D lifting,
+    :mod:`repro.compiler.temporal`) then transforms both temporal
+    half-bands with the backend's compiled 2-D level; only the tL·LL
+    subband recurses."""
+    from repro.compiler import temporal as TP
+    key, specs = plan.key, plan.level_specs
+    prog = TP.compile_temporal(key.wavelet)
+    cdt = jnp.dtype(key.compute_dtype)
+
+    def run(x):
+        details = []
+        v = x
+        for spec in specs:
+            with T.span("level3.forward", level=spec.index,
+                        backend=backend.name):
+                lo, hi = TP.temporal_forward(v, prog, cdt)
+                v, hl0, lh0, hh0 = backend.level_forward(lo, spec, key)
+                llh, hlh, lhh, hhh = backend.level_forward(hi, spec, key)
+            details.append((hl0, lh0, hh0, llh, hlh, lhh, hhh))
+        return v, tuple(details[::-1])
+
+    return _fuse_trace(plan, backend, run)
+
+
+def make_dwt3_inverse(plan, backend):
+    """Inverse 3-D executor: (lll, details coarsest-first) -> volume."""
+    from repro.compiler import temporal as TP
+    key, specs = plan.key, plan.level_specs
+    prog = TP.compile_temporal(key.wavelet, inverse=True)
+    cdt = jnp.dtype(key.compute_dtype)
+
+    def run(ll, details):
+        v = ll
+        for spec, det in zip(reversed(specs), details):
+            hl0, lh0, hh0, llh, hlh, lhh, hhh = det
+            with T.span("level3.inverse", level=spec.index,
+                        backend=backend.name):
+                lo = backend.level_inverse((v, hl0, lh0, hh0), spec, key)
+                hi = backend.level_inverse((llh, hlh, lhh, hhh), spec, key)
+                v = TP.temporal_inverse(lo, hi, prog, cdt)
+        return v
+
+    return _fuse_trace(plan, backend, run)
+
+
+# ---------------------------------------------------------------------------
 # fused-pyramid megakernel (pallas only)
 # ---------------------------------------------------------------------------
 

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 
 # the leaf pyramid module must be imported before anything from repro.core:
 # repro.core.__init__ imports transform, which imports it back
-from repro.engine.pyramid import Pyramid
+from repro.engine.pyramid import Pyramid, Pyramid3, WaveletPacket2D
 
 from repro.core import optimize as O
 from repro.core import schemes as S
@@ -79,6 +79,11 @@ PLAN_BUILDS = T.counter(
 EXECUTIONS = T.counter(
     "repro_plan_executions_total", "plan executions",
     labelnames=("op", "backend", "fuse", "scheme"))
+WORKLOAD_DEMOTIONS = T.counter(
+    "repro_workload_fuse_demotions_total",
+    "fuse='pyramid' plans demoted to fuse='levels' because the megakernel "
+    "is 2-D-pyramid-only (packet / 3-D workloads)",
+    labelnames=("workload", "backend"))
 
 #: deprecated dict-style alias of the pre-telemetry module counters
 #: (``COUNTERS["pyramid_kernel_launches"]`` etc.); will be removed one
@@ -119,6 +124,13 @@ class PlanKey:
     # (tile_h, tile_w) core size for tiled execution, or None (monolithic).
     # Part of the key so tiled plans cache exactly like monolithic ones.
     tiles: Optional[Tuple[int, int]] = None
+    # canonical packet-tree leaf paths (repro.core.packets.PacketTree),
+    # or None for the plain LL-recursion pyramid; when set, ``levels``
+    # equals the tree depth and ``shape`` stays (..., H, W)
+    packet: Optional[Tuple[str, ...]] = None
+    # 2 = image (..., H, W); 3 = volume (..., T, H, W) — the t+2D
+    # transform (1-D temporal lifting + 2-D per half-band, per level)
+    ndim: int = 2
 
 
 def max_feasible_levels(h: int, w: int) -> int:
@@ -246,8 +258,12 @@ class DwtPlan:
         progs = self.level_specs[0].fwd_programs
         return C.program_stats(progs) if progs is not None else None
 
-    def execute(self, x: jax.Array) -> Pyramid:
-        """Forward transform of ``x`` (shape must equal ``key.shape``)."""
+    def execute(self, x: jax.Array):
+        """Forward transform of ``x`` (shape must equal ``key.shape``).
+
+        Returns a :class:`Pyramid` (2-D), :class:`Pyramid3`
+        (``key.ndim == 3``) or :class:`WaveletPacket2D`
+        (``key.packet``)."""
         x = jnp.asarray(x)
         if tuple(x.shape) != self.key.shape:
             raise ValueError(
@@ -259,24 +275,39 @@ class DwtPlan:
                     scheme=k.scheme, levels=k.levels) as sp:
             # resilient dispatch: retry in place, then walk the
             # capability-checked degradation chain (repro.faults.degrade)
-            ll, details = R.dispatch(self, "forward", (x,))
+            out = R.dispatch(self, "forward", (x,))
         if sp.duration is not None:
             T.record_execution(self, sp.duration, op="forward")
+        if k.packet is not None:
+            return WaveletPacket2D(paths=k.packet, leaves=list(out))
+        ll, details = out
+        if k.ndim == 3:
+            return Pyramid3(ll=ll, details=list(details))
         return Pyramid(ll=ll, details=list(details))
 
-    def execute_inverse(self, pyr: Pyramid) -> jax.Array:
-        """Inverse transform of a pyramid produced by :meth:`execute`."""
-        if pyr.levels != self.key.levels:
-            raise ValueError(
-                f"plan built for {self.key.levels} levels, "
-                f"pyramid has {pyr.levels}")
+    def execute_inverse(self, pyr) -> jax.Array:
+        """Inverse transform of a container produced by :meth:`execute`
+        (:class:`Pyramid`, :class:`Pyramid3` or, for packet plans, a
+        :class:`WaveletPacket2D` over any admissible leaf set matching
+        ``key.packet``)."""
         k = self.key
+        if k.packet is not None:
+            if tuple(pyr.paths) != k.packet:
+                raise ValueError(
+                    f"plan built for packet leaves {k.packet}, "
+                    f"got {tuple(pyr.paths)}")
+            args = (tuple(jnp.asarray(a) for a in pyr.leaves),)
+        else:
+            if pyr.levels != k.levels:
+                raise ValueError(
+                    f"plan built for {k.levels} levels, "
+                    f"pyramid has {pyr.levels}")
+            args = (pyr.ll, tuple(tuple(d) for d in pyr.details))
         EXECUTIONS.inc(op="inverse", backend=k.backend, fuse=k.fuse,
                        scheme=k.scheme)
         with T.span("execute.inverse", backend=k.backend, fuse=k.fuse,
                     scheme=k.scheme, levels=k.levels) as sp:
-            out = R.dispatch(self, "inverse",
-                             (pyr.ll, tuple(tuple(d) for d in pyr.details)))
+            out = R.dispatch(self, "inverse", args)
         if sp.duration is not None:
             T.record_execution(self, sp.duration, op="inverse")
         return out
@@ -428,13 +459,51 @@ def _build_plan(key: PlanKey,
     if key.tap_opt not in C.OPT_LEVELS:
         raise ValueError(f"unknown tap_opt {key.tap_opt!r}; "
                          f"available: {C.OPT_LEVELS}")
-    if len(key.shape) < 2:
-        raise ValueError(f"input must be (..., H, W), got {key.shape}")
     if key.levels < 1:
         raise ValueError(f"levels must be >= 1, got {key.levels}")
+    demoted = None
+    if key.ndim not in (2, 3):
+        raise ValueError(f"ndim must be 2 or 3, got {key.ndim}")
+    if key.packet is not None or key.ndim == 3:
+        workload = "packet" if key.packet is not None else "dwt3"
+        if key.packet is not None and key.ndim != 2:
+            raise ValueError(
+                "packet transforms are 2-D (PlanKey.packet with "
+                f"ndim={key.ndim}); decompose frames individually or "
+                "use the plain 3-D pyramid (ndim=3, packet=None)")
+        if key.tiles is not None:
+            raise ValueError(
+                f"tiled execution (PlanKey.tiles={key.tiles!r}) is "
+                f"2-D-pyramid-only; {workload} plans run monolithic")
+        if key.packet is not None:
+            from repro.core import packets as PK
+            tree = PK.PacketTree(key.packet)   # validates admissibility
+            if tree.depth != key.levels:
+                raise ValueError(
+                    f"PlanKey.levels={key.levels} must equal the packet "
+                    f"tree depth {tree.depth} (get_plan normalizes this)")
+        if key.fuse == "pyramid":
+            # capability-checked demotion: the megakernel fuses the 2-D
+            # LL recursion only — packet trees branch into all four
+            # children and the 3-D level interleaves a temporal pass
+            WORKLOAD_DEMOTIONS.inc(workload=workload, backend=key.backend)
+            key = dataclasses.replace(key, fuse="levels")
+            demoted = (f"fuse='pyramid' is the 2-D pyramid megakernel; "
+                       f"{workload} plan executes as fuse='levels'")
+    min_rank = 3 if key.ndim == 3 else 2
+    want = "(..., T, H, W)" if key.ndim == 3 else "(..., H, W)"
+    if len(key.shape) < min_rank:
+        raise ValueError(f"input must be {want}, got {key.shape}")
     backend.validate(key)
     h, w = key.shape[-2], key.shape[-1]
     validate_image_geometry(h, w, key.levels)
+    if key.ndim == 3:
+        t, div = key.shape[-3], 1 << key.levels
+        if t % div:
+            raise ValueError(
+                f"levels={key.levels} infeasible for volume "
+                f"{t}x{h}x{w}: T={t} is not divisible by "
+                f"2^levels={div}")
 
     if key.backend == "auto":
         # profile-guided resolution: the cost model (or the cold-start
@@ -462,6 +531,23 @@ def _build_plan(key: PlanKey,
         specs.append(_resolve_level(lvl, h >> lvl, w >> lvl, key, fwd, inv,
                                     block_target, backend))
     plan = DwtPlan(key=key, level_specs=tuple(specs))
+    if demoted is not None:
+        plan.fallback = demoted
+    if key.packet is not None:
+        from repro.engine import executor as X
+        plan._forward = X.make_packet_forward(plan, backend)
+        plan._inverse = X.make_packet_inverse(plan, backend)
+        return plan
+    if key.ndim == 3:
+        from repro.engine import executor as X
+        if key.fuse == "levels" and not backend.temporal_fuse \
+                and plan.fallback is None:
+            plan.fallback = (
+                f"backend {key.backend!r} has no fused t+2D trace; the "
+                f"temporal pass runs unfused between its 2-D levels")
+        plan._forward = X.make_dwt3_forward(plan, backend)
+        plan._inverse = X.make_dwt3_inverse(plan, backend)
+        return plan
     if key.fuse == "pyramid" and backend.pyramid_kernel \
             and key.tiles is None:
         plan.pyramid, plan.fallback = _resolve_pyramid(key, h, w,

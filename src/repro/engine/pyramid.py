@@ -13,6 +13,12 @@ import jax
 
 Detail = Tuple[jax.Array, jax.Array, jax.Array]
 
+#: one 3-D level's detail subbands, in this order:
+#: (tL·HL, tL·LH, tL·HH, tH·LL, tH·HL, tH·LH, tH·HH) — the three spatial
+#: details of the temporal low band, then all four subbands of the
+#: temporal high band (only tL·LL recurses)
+Detail3 = Tuple[jax.Array, ...]
+
 
 @dataclasses.dataclass
 class Pyramid:
@@ -27,8 +33,59 @@ class Pyramid:
         return len(self.details)
 
 
+@dataclasses.dataclass
+class Pyramid3:
+    """Multi-level 3-D (t+2D) DWT output: the coarsest tLLL
+    approximation volume plus per-level 7-subband detail tuples
+    (coarsest first, see :data:`Detail3`).  Every subband is a
+    ``(..., T/2^l, H/2^l, W/2^l)`` volume."""
+
+    ll: jax.Array
+    details: List[Detail3]
+
+    @property
+    def levels(self) -> int:
+        return len(self.details)
+
+
+@dataclasses.dataclass
+class WaveletPacket2D:
+    """2-D wavelet packet coefficients: one array per leaf of the
+    admissible packet tree, in canonical leaf order (``paths`` matches
+    ``PlanKey.packet``; see :mod:`repro.core.packets`)."""
+
+    paths: Tuple[str, ...]
+    leaves: List[jax.Array]
+
+    @property
+    def depth(self) -> int:
+        return max(len(p) for p in self.paths)
+
+    def __getitem__(self, path: str) -> jax.Array:
+        try:
+            return self.leaves[self.paths.index(path)]
+        except ValueError:
+            raise KeyError(
+                f"no packet leaf {path!r}; leaves: {self.paths}") from None
+
+    def items(self):
+        return list(zip(self.paths, self.leaves))
+
+
 jax.tree_util.register_pytree_node(
     Pyramid,
     lambda p: ((p.ll, p.details), None),
     lambda aux, ch: Pyramid(ch[0], ch[1]),
+)
+
+jax.tree_util.register_pytree_node(
+    Pyramid3,
+    lambda p: ((p.ll, p.details), None),
+    lambda aux, ch: Pyramid3(ch[0], ch[1]),
+)
+
+jax.tree_util.register_pytree_node(
+    WaveletPacket2D,
+    lambda p: (tuple(p.leaves), tuple(p.paths)),
+    lambda aux, ch: WaveletPacket2D(aux, list(ch)),
 )

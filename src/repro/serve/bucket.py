@@ -25,16 +25,22 @@ import numpy as np
 
 from repro.engine.pyramid import Pyramid
 
-OPS = ("dwt2", "idwt2")
+OPS = ("dwt2", "idwt2", "dwt3", "idwt3", "wpt2", "iwpt2")
+#: ops whose geometry carries a temporal axis (..., T, H, W)
+OPS_3D = ("dwt3", "idwt3")
+#: ops keyed on a packet-tree leaf set
+OPS_PACKET = ("wpt2", "iwpt2")
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketKey:
     """Everything that must match for two requests to share one batched
     plan execution: the transform direction, the image geometry (the
-    shape bucket), and every plan-key configuration field."""
+    shape bucket), and every plan-key configuration field.  3-D ops add
+    the temporal extent ``t`` (0 for 2-D ops); packet ops add the
+    canonical leaf tuple ``packet`` (None otherwise)."""
 
-    op: str                 # "dwt2" | "idwt2"
+    op: str                 # one of OPS
     h: int
     w: int
     dtype: str
@@ -47,17 +53,28 @@ class BucketKey:
     boundary: str
     compute_dtype: str
     tap_opt: str
+    t: int = 0
+    packet: Optional[Tuple[str, ...]] = None
 
     def plan_kwargs(self, batch: int) -> dict:
         """``repro.engine.get_plan`` arguments for this bucket at one
         padded batch size."""
-        return dict(wavelet=self.wavelet, scheme=self.scheme,
-                    levels=self.levels, shape=(batch, self.h, self.w),
-                    dtype=self.dtype, backend=self.backend,
-                    optimize=self.optimize, fuse=self.fuse,
-                    boundary=self.boundary,
-                    compute_dtype=self.compute_dtype,
-                    tap_opt=self.tap_opt)
+        if self.op in OPS_3D:
+            shape = (batch, self.t, self.h, self.w)
+        else:
+            shape = (batch, self.h, self.w)
+        kw = dict(wavelet=self.wavelet, scheme=self.scheme,
+                  levels=self.levels, shape=shape,
+                  dtype=self.dtype, backend=self.backend,
+                  optimize=self.optimize, fuse=self.fuse,
+                  boundary=self.boundary,
+                  compute_dtype=self.compute_dtype,
+                  tap_opt=self.tap_opt)
+        if self.op in OPS_3D:
+            kw["ndim"] = 3
+        if self.packet is not None:
+            kw["packet"] = self.packet
+        return kw
 
 
 @dataclasses.dataclass
@@ -168,22 +185,68 @@ def scatter_images(batch, n: int) -> List[np.ndarray]:
     return [arr[i] for i in range(n)]
 
 
+def stack_trees(reqs, pad_to: int):
+    """Stack arbitrary pytree payloads (Pyramid3, WaveletPacket2D, ...)
+    host-side into one zero-padded batched tree.  Generic sibling of
+    :func:`stack_pyramids`: every leaf of every request is stacked onto
+    a new leading batch axis, padded with zeros up to ``pad_to``."""
+    import jax
+    _, treedef = jax.tree_util.tree_flatten(reqs[0].payload)
+    cols = [jax.tree_util.tree_flatten(r.payload)[0] for r in reqs]
+    pad = pad_to - len(reqs)
+    stacked = []
+    for i in range(treedef.num_leaves):
+        a = np.stack([np.asarray(c[i]) for c in cols])
+        if pad > 0:
+            a = np.concatenate(
+                [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+        stacked.append(a)
+    return jax.tree_util.tree_unflatten(treedef, stacked)
+
+
+def scatter_tree(tree, n: int) -> list:
+    """Split one batched pytree into ``n`` per-request host trees.
+    Each leaf is materialized once (one device->host transfer); the
+    per-request trees are zero-copy views into those buffers."""
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    mats = [np.asarray(leaf) for leaf in leaves]
+    return [jax.tree_util.tree_unflatten(treedef, [m[i] for m in mats])
+            for i in range(n)]
+
+
 def request_key(x_shape, dtype, *, op: str, wavelet: str, scheme: str,
                 levels: int, backend: str, optimize: bool, fuse: str,
-                boundary: str, compute_dtype: str,
-                tap_opt: str) -> BucketKey:
-    """Bucket key for one request.  For ``idwt2`` requests ``x_shape``
-    is the *reconstructed image* shape (``ll.shape << levels``), so both
-    directions of the same configuration share one geometry key space."""
+                boundary: str, compute_dtype: str, tap_opt: str,
+                packet=None) -> BucketKey:
+    """Bucket key for one request.  For inverse requests ``x_shape``
+    is the *reconstructed image/volume* shape (``ll.shape << levels``),
+    so both directions of the same configuration share one geometry key
+    space.  3-D ops take ``(T, H, W)`` shapes; packet ops carry a
+    ``packet`` spec, normalized to the canonical leaf tuple so every
+    spelling of the same tree shares one bucket."""
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; available: {OPS}")
-    if len(x_shape) != 2:
+    want = 3 if op in OPS_3D else 2
+    if len(x_shape) != want:
+        what = "(T, H, W) volumes" if want == 3 else "(H, W) images"
         raise ValueError(
-            f"serving requests are single (H, W) images; got shape "
+            f"serving {op!r} requests are single {what}; got shape "
             f"{tuple(x_shape)} — split batches client-side (the server "
             f"re-batches across requests)")
-    return BucketKey(op=op, h=int(x_shape[0]), w=int(x_shape[1]),
+    t = int(x_shape[0]) if want == 3 else 0
+    if op in OPS_PACKET:
+        if packet is None:
+            raise ValueError(f"op {op!r} requires a packet spec")
+        from repro.core import packets as PK
+        tree = PK.PacketTree.from_spec(packet)
+        packet = tree.leaves
+        levels = tree.depth
+    elif packet is not None:
+        raise ValueError(f"op {op!r} does not take a packet spec")
+    return BucketKey(op=op, h=int(x_shape[-2]), w=int(x_shape[-1]),
                      dtype=str(dtype), wavelet=wavelet, scheme=scheme,
                      levels=int(levels), backend=backend,
                      optimize=bool(optimize), fuse=fuse, boundary=boundary,
-                     compute_dtype=compute_dtype, tap_opt=tap_opt)
+                     compute_dtype=compute_dtype, tap_opt=tap_opt,
+                     t=t, packet=packet)

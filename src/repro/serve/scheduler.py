@@ -46,7 +46,7 @@ from repro import telemetry as T
 from repro.core.transform import validate_finite
 from repro.distributed.fault_tolerance import (FaultToleranceConfig,
                                                HeartbeatTracker)
-from repro.engine.pyramid import Pyramid
+from repro.engine.pyramid import Pyramid, Pyramid3, WaveletPacket2D
 from repro.faults import inject as FI
 from repro.faults.policy import (CircuitBreaker, CircuitOpenError,
                                  DeadlineExceeded)
@@ -259,6 +259,100 @@ class DwtServer:
             scheme=scheme, levels=levels, backend=backend,
             optimize=optimize, fuse=fuse, boundary=boundary,
             compute_dtype=compute_dtype, tap_opt=tap_opt)
+        return await self._submit(key, host)
+
+    async def submit_dwt3(self, x, *, wavelet: str = "cdf97",
+                          scheme: str = "ns-polyconv", levels: int = 1,
+                          backend: str = "jnp", optimize: bool = False,
+                          fuse: str = "levels", boundary: str = "periodic",
+                          compute_dtype: str = "float32",
+                          tap_opt: str = "full") -> Pyramid3:
+        """Enqueue one forward t+2D transform of a single (T, H, W)
+        volume; resolves to the host-side :class:`Pyramid3`.  Volumes
+        bucket on their full (T, H, W) geometry and batch onto the
+        plan's free leading dim exactly like images."""
+        x = np.asarray(x)
+        validate_finite(x, self.cfg.validate, what="serve request")
+        key = BK.request_key(
+            x.shape, x.dtype, op="dwt3", wavelet=wavelet, scheme=scheme,
+            levels=levels, backend=backend, optimize=optimize, fuse=fuse,
+            boundary=boundary, compute_dtype=compute_dtype, tap_opt=tap_opt)
+        return await self._submit(key, x)
+
+    async def submit_idwt3(self, pyr: Pyramid3, *,
+                           wavelet: str = "cdf97",
+                           scheme: str = "ns-polyconv",
+                           backend: str = "jnp",
+                           optimize: bool = False,
+                           fuse: str = "levels",
+                           boundary: str = "periodic",
+                           compute_dtype: str = "float32",
+                           tap_opt: str = "full") -> np.ndarray:
+        """Enqueue one inverse t+2D transform of a single-volume
+        :class:`Pyramid3`; resolves to the reconstructed host-side
+        (T, H, W) array."""
+        host = Pyramid3(
+            ll=np.asarray(pyr.ll),
+            details=[tuple(np.asarray(d) for d in dd)
+                     for dd in pyr.details])
+        validate_finite(host, self.cfg.validate, what="serve request")
+        levels = host.levels
+        shape = (host.ll.shape[-3] << levels,
+                 host.ll.shape[-2] << levels,
+                 host.ll.shape[-1] << levels)
+        key = BK.request_key(
+            shape, host.ll.dtype, op="idwt3", wavelet=wavelet,
+            scheme=scheme, levels=levels, backend=backend,
+            optimize=optimize, fuse=fuse, boundary=boundary,
+            compute_dtype=compute_dtype, tap_opt=tap_opt)
+        return await self._submit(key, host)
+
+    async def submit_wpt2(self, x, *, packet="full:2",
+                          wavelet: str = "cdf97",
+                          scheme: str = "ns-polyconv",
+                          backend: str = "jnp", optimize: bool = False,
+                          fuse: str = "levels",
+                          boundary: str = "periodic",
+                          compute_dtype: str = "float32",
+                          tap_opt: str = "full") -> WaveletPacket2D:
+        """Enqueue one wavelet-packet transform of a single (H, W)
+        image; resolves to the host-side :class:`WaveletPacket2D`.
+        ``packet`` takes any :meth:`~repro.core.packets
+        .PacketTree.from_spec` spelling; equivalent spellings share one
+        bucket (the key carries the canonical leaf tuple)."""
+        x = np.asarray(x)
+        validate_finite(x, self.cfg.validate, what="serve request")
+        key = BK.request_key(
+            x.shape, x.dtype, op="wpt2", wavelet=wavelet, scheme=scheme,
+            levels=1, backend=backend, optimize=optimize, fuse=fuse,
+            boundary=boundary, compute_dtype=compute_dtype,
+            tap_opt=tap_opt, packet=packet)
+        return await self._submit(key, x)
+
+    async def submit_iwpt2(self, pk: WaveletPacket2D, *,
+                           wavelet: str = "cdf97",
+                           scheme: str = "ns-polyconv",
+                           backend: str = "jnp",
+                           optimize: bool = False,
+                           fuse: str = "levels",
+                           boundary: str = "periodic",
+                           compute_dtype: str = "float32",
+                           tap_opt: str = "full") -> np.ndarray:
+        """Enqueue one inverse packet transform of a single-image
+        :class:`WaveletPacket2D`; resolves to the reconstructed
+        host-side (H, W) array."""
+        host = WaveletPacket2D(
+            paths=tuple(pk.paths),
+            leaves=[np.asarray(leaf) for leaf in pk.leaves])
+        validate_finite(host, self.cfg.validate, what="serve request")
+        d0 = len(host.paths[0])
+        shape = (host.leaves[0].shape[-2] << d0,
+                 host.leaves[0].shape[-1] << d0)
+        key = BK.request_key(
+            shape, host.leaves[0].dtype, op="iwpt2", wavelet=wavelet,
+            scheme=scheme, levels=1, backend=backend, optimize=optimize,
+            fuse=fuse, boundary=boundary, compute_dtype=compute_dtype,
+            tap_opt=tap_opt, packet=host.paths)
         return await self._submit(key, host)
 
     async def _submit(self, key: BK.BucketKey, payload):
@@ -533,21 +627,31 @@ class DwtServer:
                     real=n, padded=b):
             FI.maybe_inject("serve.batch", op=key.op, batch=b)
             plan = E.get_plan(**key.plan_kwargs(b))
-            if key.op == "dwt2":
+            if key.op in ("dwt2", "dwt3", "wpt2"):
+                # forward ops: every payload is a bare (T?, H, W) array,
+                # so image stacking covers volumes too
                 with T.span("serve.stack_h2d", op=key.op, batch=b):
                     FI.maybe_inject("serve.stack_h2d", op=key.op)
                     xs = jnp.asarray(BK.stack_images(reqs, b))
                 with T.span("serve.execute", op=key.op, batch=b,
                             backend=plan.key.backend):
-                    pyr = plan.execute(xs)
+                    out = plan.execute(xs)
                 with T.span("serve.scatter", op=key.op, batch=b):
-                    return BK.scatter_pyramid(pyr, n), b
+                    if key.op == "dwt2":
+                        return BK.scatter_pyramid(out, n), b
+                    return BK.scatter_tree(out, n), b
             with T.span("serve.stack_h2d", op=key.op, batch=b):
                 FI.maybe_inject("serve.stack_h2d", op=key.op)
-                host = BK.stack_pyramids(reqs, b)
-                dev = Pyramid(ll=jnp.asarray(host.ll),
-                              details=[tuple(jnp.asarray(d) for d in dd)
-                                       for dd in host.details])
+                if key.op == "idwt2":
+                    host = BK.stack_pyramids(reqs, b)
+                    dev = Pyramid(ll=jnp.asarray(host.ll),
+                                  details=[tuple(jnp.asarray(d)
+                                                 for d in dd)
+                                           for dd in host.details])
+                else:
+                    # idwt3 / iwpt2: generic pytree stacking; the plan's
+                    # inverse executor coerces host leaves to device
+                    dev = BK.stack_trees(reqs, b)
             with T.span("serve.execute", op=key.op, batch=b,
                         backend=plan.key.backend):
                 out = plan.execute_inverse(dev)

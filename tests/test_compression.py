@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis")
+# hypothesis availability is gated in tests/conftest.py (skip locally,
+# hard error in CI via REPRO_REQUIRE_HYPOTHESIS)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compression as CMP

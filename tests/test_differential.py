@@ -1,0 +1,219 @@
+"""Differential cross-backend conformance harness (hypothesis-driven).
+
+Random points in the full configuration space — scheme x backend x
+fuse x tap_opt x levels x odd/prime shape x batch x dtype — must agree:
+
+* **cross-backend**: every backend's forward coefficients match the
+  eager ``jnp`` reference for the same PlanKey-modulo-backend, to the
+  per-dtype tolerance below;
+* **round-trip**: ``inverse(forward(x)) == x`` to the per-dtype
+  tolerance, on every backend — including wavelet-packet and 3-D
+  (t+2D) workloads.
+
+Floating-point lifting is *not* bitwise invertible ((a + b) - b != a
+in fp), so the contract is tolerance-based everywhere; the tables
+below pin how loose each dtype is allowed to be (see
+docs/workloads.md, "Numerical contract").  When hypothesis shrinks a
+failure, the offending :class:`~repro.engine.plan.PlanKey` is printed
+via ``note`` so the case reproduces as a one-liner.
+
+Requires the ``[test]`` extra; tests/conftest.py skips this module
+when hypothesis is absent locally and hard-fails in CI
+(REPRO_REQUIRE_HYPOTHESIS=1) so the sweep can never silently drop out.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, note, settings
+from hypothesis import strategies as st
+
+from repro import engine as E
+from repro.core.schemes import SCHEMES
+from repro.engine.backends import get_backend
+
+pytestmark = pytest.mark.slow
+
+BACKENDS = ("jnp", "xla", "pallas")   # pallas = interpret mode off-TPU
+WAVELETS = ("cdf53", "cdf97", "dd137")
+
+
+def _fuse_strategy(backend_strategy):
+    """fuse mode drawn from the *backend's own* capability set (xla has
+    no pyramid megakernel; packet/3-D keys demote pyramid themselves)."""
+    return backend_strategy.flatmap(
+        lambda b: st.tuples(st.just(b),
+                            st.sampled_from(get_backend(b).fuse_modes)))
+
+# forward -> inverse round-trip tolerance per storage dtype (compute
+# runs in float32 for every case; fp16 pays its storage quantization)
+ROUNDTRIP_TOL = {
+    "float32": dict(rtol=1e-3, atol=1e-4),
+    "float16": dict(rtol=2e-2, atol=2e-3),
+}
+# cross-backend forward agreement vs the eager jnp reference: same
+# algebra, different instruction order, so a few ulp of fp32 slack
+CROSS_TOL = {
+    "float32": dict(rtol=2e-4, atol=2e-5),
+    "float16": dict(rtol=2e-2, atol=2e-3),
+}
+
+# odd/prime multipliers: geometry only requires divisibility by the
+# level block (2^levels), so h = m * 2^levels with prime m exercises
+# every non-power-of-two subband extent
+ODD_MULTIPLIERS = (2, 3, 5, 7)
+
+_SETTINGS = settings(max_examples=15, deadline=None, derandomize=True,
+                     suppress_health_check=[HealthCheck.too_slow,
+                                            HealthCheck.data_too_large])
+
+
+def _image(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def _plan(key_note, **kw):
+    """get_plan + note() the concrete PlanKey so a shrunk hypothesis
+    failure prints the exact offending configuration."""
+    plan = E.get_plan(**kw)
+    note(f"{key_note}: {plan.key}")
+    return plan
+
+
+def _assert_tree_close(got, want, tol, what):
+    got_leaves = _leaves(got)
+    want_leaves = _leaves(want)
+    assert len(got_leaves) == len(want_leaves), what
+    for i, (a, b) in enumerate(zip(got_leaves, want_leaves)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   err_msg=f"{what} [leaf {i}]", **tol)
+
+
+def _leaves(tree):
+    import jax
+    return jax.tree_util.tree_flatten(tree)[0]
+
+
+base_config = st.fixed_dictionaries(dict(
+    wavelet=st.sampled_from(WAVELETS),
+    scheme=st.sampled_from(sorted(SCHEMES)),
+    backend_fuse=_fuse_strategy(st.sampled_from(BACKENDS)),
+    tap_opt=st.sampled_from(("off", "exact", "full")),
+    levels=st.integers(1, 3),
+    hm=st.sampled_from(ODD_MULTIPLIERS),
+    wm=st.sampled_from(ODD_MULTIPLIERS),
+    batch=st.integers(1, 3),
+    dtype=st.sampled_from(("float32", "float16")),
+    seed=st.integers(0, 2**31 - 1),
+))
+
+
+@_SETTINGS
+@given(cfg=base_config)
+def test_dwt2_cross_backend_and_roundtrip(cfg):
+    """Forward coefficients agree with the jnp reference; the inverse
+    reconstructs the input — at any random point of the config space."""
+    backend, fuse = cfg["backend_fuse"]
+    block = 1 << cfg["levels"]
+    shape = (cfg["batch"], cfg["hm"] * block, cfg["wm"] * block)
+    x = _image(shape, cfg["dtype"], cfg["seed"])
+    kw = dict(wavelet=cfg["wavelet"], scheme=cfg["scheme"],
+              levels=cfg["levels"], shape=shape, dtype=cfg["dtype"],
+              fuse=fuse, tap_opt=cfg["tap_opt"],
+              compute_dtype="float32")
+    plan = _plan("PlanKey", backend=backend, **kw)
+    pyr = plan.execute(x)
+    if backend != "jnp":
+        ref_kw = dict(kw, fuse="none", tap_opt="full")
+        ref = _plan("reference PlanKey", backend="jnp", **ref_kw)
+        _assert_tree_close(pyr, ref.execute(x),
+                           CROSS_TOL[cfg["dtype"]],
+                           f"forward parity vs jnp ({plan.key})")
+    xr = plan.execute_inverse(pyr)
+    np.testing.assert_allclose(np.asarray(xr), x,
+                               err_msg=f"round-trip ({plan.key})",
+                               **ROUNDTRIP_TOL[cfg["dtype"]])
+
+
+packet_config = st.fixed_dictionaries(dict(
+    wavelet=st.sampled_from(WAVELETS),
+    scheme=st.sampled_from(sorted(SCHEMES)),
+    backend_fuse=_fuse_strategy(st.sampled_from(BACKENDS)),
+    tap_opt=st.sampled_from(("off", "exact", "full")),
+    packet=st.sampled_from(("full:1", "full:2", "dwt:2", "dwt:3")),
+    hm=st.sampled_from(ODD_MULTIPLIERS),
+    wm=st.sampled_from(ODD_MULTIPLIERS),
+    batch=st.integers(1, 2),
+    dtype=st.sampled_from(("float32", "float16")),
+    seed=st.integers(0, 2**31 - 1),
+))
+
+
+@_SETTINGS
+@given(cfg=packet_config)
+def test_packet_cross_backend_and_roundtrip(cfg):
+    """Wavelet-packet leaves agree across backends and reconstruct
+    exactly (to dtype tolerance) from any admissible tree."""
+    backend, fuse = cfg["backend_fuse"]
+    depth = int(cfg["packet"].split(":")[1])
+    block = 1 << depth
+    shape = (cfg["batch"], cfg["hm"] * block, cfg["wm"] * block)
+    x = _image(shape, cfg["dtype"], cfg["seed"])
+    kw = dict(wavelet=cfg["wavelet"], scheme=cfg["scheme"],
+              shape=shape, dtype=cfg["dtype"], fuse=fuse,
+              tap_opt=cfg["tap_opt"], compute_dtype="float32",
+              packet=cfg["packet"])
+    plan = _plan("PlanKey", backend=backend, **kw)
+    pk = plan.execute(x)
+    assert pk.paths == plan.key.packet
+    if backend != "jnp":
+        ref_kw = dict(kw, fuse="none", tap_opt="full")
+        ref = _plan("reference PlanKey", backend="jnp", **ref_kw)
+        _assert_tree_close(pk, ref.execute(x), CROSS_TOL[cfg["dtype"]],
+                           f"packet parity vs jnp ({plan.key})")
+    xr = plan.execute_inverse(pk)
+    np.testing.assert_allclose(np.asarray(xr), x,
+                               err_msg=f"packet round-trip ({plan.key})",
+                               **ROUNDTRIP_TOL[cfg["dtype"]])
+
+
+volume_config = st.fixed_dictionaries(dict(
+    wavelet=st.sampled_from(WAVELETS),
+    scheme=st.sampled_from(sorted(SCHEMES)),
+    backend_fuse=_fuse_strategy(st.sampled_from(BACKENDS)),
+    tap_opt=st.sampled_from(("off", "exact", "full")),
+    levels=st.integers(1, 2),
+    tm=st.sampled_from((1, 3)),
+    hm=st.sampled_from(ODD_MULTIPLIERS),
+    wm=st.sampled_from(ODD_MULTIPLIERS),
+    batch=st.integers(1, 2),
+    dtype=st.sampled_from(("float32", "float16")),
+    seed=st.integers(0, 2**31 - 1),
+))
+
+
+@_SETTINGS
+@given(cfg=volume_config)
+def test_dwt3_cross_backend_and_roundtrip(cfg):
+    """t+2D subbands agree across backends and round-trip to the input
+    volume, including odd/prime spatial extents and batch dims."""
+    backend, fuse = cfg["backend_fuse"]
+    block = 1 << cfg["levels"]
+    shape = (cfg["batch"], cfg["tm"] * block,
+             cfg["hm"] * block, cfg["wm"] * block)
+    x = _image(shape, cfg["dtype"], cfg["seed"])
+    kw = dict(wavelet=cfg["wavelet"], scheme=cfg["scheme"],
+              levels=cfg["levels"], shape=shape, dtype=cfg["dtype"],
+              fuse=fuse, tap_opt=cfg["tap_opt"],
+              compute_dtype="float32", ndim=3)
+    plan = _plan("PlanKey", backend=backend, **kw)
+    pyr = plan.execute(x)
+    assert pyr.levels == cfg["levels"]
+    if backend != "jnp":
+        ref_kw = dict(kw, fuse="none", tap_opt="full")
+        ref = _plan("reference PlanKey", backend="jnp", **ref_kw)
+        _assert_tree_close(pyr, ref.execute(x), CROSS_TOL[cfg["dtype"]],
+                           f"3-D parity vs jnp ({plan.key})")
+    xr = plan.execute_inverse(pyr)
+    np.testing.assert_allclose(np.asarray(xr), x,
+                               err_msg=f"3-D round-trip ({plan.key})",
+                               **ROUNDTRIP_TOL[cfg["dtype"]])

@@ -16,12 +16,10 @@ from repro.faults.policy import (CircuitBreaker, Deadline, DeadlineExceeded,
                                  retry_call)
 
 
-@pytest.fixture(autouse=True)
-def _no_active_plan():
-    """Every test starts and ends with the plane disarmed."""
-    prev = FJ.activate(None)
-    yield
-    FJ.activate(prev)
+# the plane is disarmed around every test by
+# tests/conftest.py::_isolated_planes
+
+pytestmark = pytest.mark.chaos
 
 
 class FakeClock:

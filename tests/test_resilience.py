@@ -24,11 +24,10 @@ from repro.faults.degrade import (FALLBACKS, DegradationExhausted,
                                   ExactnessError)
 
 
-@pytest.fixture(autouse=True)
-def _disarmed():
-    prev = FJ.activate(None)
-    yield
-    FJ.activate(prev)
+# the plane is disarmed around every test by
+# tests/conftest.py::_isolated_planes
+
+pytestmark = pytest.mark.chaos
 
 
 def _arm(text, seed=0):

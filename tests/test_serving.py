@@ -20,7 +20,7 @@ from repro import engine
 from repro.core import dwt2, idwt2
 from repro.serve import (BucketSpec, DwtServer, QueueFullError, ServeConfig,
                          WorkerDied, bucket_batches, padded_batch,
-                         reset_metrics, serve_map, serve_stats)
+                         serve_map, serve_stats)
 
 # (backend, fuse) pairs whose batched execution is bit-identical to
 # single-image dispatch on every platform we test (pallas runs the
@@ -30,12 +30,8 @@ from repro.serve import (BucketSpec, DwtServer, QueueFullError, ServeConfig,
 EXACT_FORWARD = [("jnp", "levels"), ("xla", "levels"), ("pallas", "none")]
 
 
-@pytest.fixture(autouse=True)
-def _fresh_metrics():
-    reset_metrics()
-    yield
-    reset_metrics()
-
+# serve-metrics reset between tests now lives in
+# tests/conftest.py::_isolated_planes
 
 def _images(n, h=32, w=32, seed=0):
     rng = np.random.default_rng(seed)

@@ -20,18 +20,8 @@ from repro.core import dwt2
 from repro.telemetry.registry import MAX_SERIES, MetricsRegistry
 
 
-@pytest.fixture(autouse=True)
-def _isolate_mode():
-    """Each test starts in the default 'counters' mode with clean span
-    state; metric *values* accumulate process-wide by design, so tests
-    assert on deltas (or reset explicitly)."""
-    prev = T.mode()
-    T.set_mode("counters")
-    T.TRACER.clear()
-    yield
-    T.set_mode(prev)
-    T.TRACER.clear()
-
+# per-test isolation (mode, span ring, registry reset) now lives in
+# tests/conftest.py::_isolated_planes
 
 # -- registry ----------------------------------------------------------
 

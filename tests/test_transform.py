@@ -3,7 +3,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis")
+# hypothesis availability is gated in tests/conftest.py: absent locally
+# -> this module is skipped at collection; in CI (REPRO_REQUIRE_HYPOTHESIS)
+# a missing install is a hard error, never a silent skip
 from hypothesis import given, settings, strategies as st
 
 from repro.core import transform as T
